@@ -1,0 +1,23 @@
+"""Ablation (paper §VI.C): uniform Eq.-1 weights vs staleness/accuracy-
+weighted aggregation — the paper proposes this as future work; we implement
+and measure it."""
+from benchmarks.common import emit, fmt_curve, timed
+from repro.fl.experiments import default_dagfl_config, make_cnn_setup
+from repro.fl.systems import SimConfig, run_dagfl
+
+
+def run(iterations: int = 200, seed: int = 0):
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=50, seed=seed)
+    dcfg = default_dagfl_config(num_nodes=50)
+    sim = SimConfig(iterations=iterations, eval_every=50, seed=seed)
+    out = {}
+    for name, weighted in (("uniform", False), ("weighted", True)):
+        with timed() as t:
+            res = run_dagfl(task, nodes, dcfg, sim, gval, weighted=weighted)
+        out[name] = res
+        emit(
+            f"ablation_vi_c/{name}",
+            (t["s"] / iterations) * 1e6,
+            f"final_acc={res.accs[-1]:.3f};curve={fmt_curve(res.iters, res.accs)}",
+        )
+    return out

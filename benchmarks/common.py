@@ -1,0 +1,29 @@
+"""Shared helpers for the benchmark harness (CSV conventions)."""
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+from typing import Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def header() -> None:
+    print("name,us_per_call,derived")
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def fmt_curve(iters: Iterable, accs: Iterable) -> str:
+    return ";".join(f"{int(i)}:{a:.3f}" for i, a in zip(iters, accs))

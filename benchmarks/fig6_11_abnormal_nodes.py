@@ -1,0 +1,40 @@
+"""Paper Figs. 6-11: accuracy under lazy / poisoning / backdoor nodes.
+
+Fig. 6  — DAG-FL with 5/10/20 abnormal nodes (per type): insensitive.
+Figs. 7-10 — four systems with 20% lazy / poisoning nodes:
+  * lazy barely hurts DAG-FL/Google/Async; Block FL degrades,
+  * poisoning hurts Google/Async badly; DAG-FL best (isolation).
+Fig. 11 — backdoor: all systems keep clean accuracy (the attack is targeted).
+"""
+from benchmarks.common import emit, fmt_curve, timed
+from repro.fl.experiments import abnormal_experiment
+
+
+def run_dagfl_sweep(task_name="cnn", iterations=300, seed=0, counts=(5, 10, 20)):
+    """Fig. 6: DAG-FL only, all three abnormal types, varying counts."""
+    for abnormal in ("lazy", "poisoning", "backdoor"):
+        if abnormal == "backdoor" and task_name != "cnn":
+            continue
+        for n in counts:
+            with timed() as t:
+                res = abnormal_experiment(
+                    task_name, abnormal, n, iterations, seed, systems=("dagfl",)
+                )["dagfl"]
+            emit(
+                f"fig6/{task_name}/dagfl/{abnormal}/{n}",
+                (t["s"] / iterations) * 1e6,
+                f"final_acc={res.accs[-1]:.3f};curve={fmt_curve(res.iters, res.accs)}",
+            )
+
+
+def run_four_systems(task_name="cnn", abnormal="lazy", num=20, iterations=300, seed=0):
+    """Figs. 7-10: all four systems at 20% abnormal."""
+    with timed() as t:
+        res = abnormal_experiment(task_name, abnormal, num, iterations, seed)
+    for name, r in res.items():
+        extra = f"final_acc={r.accs[-1]:.3f};curve={fmt_curve(r.iters, r.accs)}"
+        if "attack_success" in r.extras:
+            extra += f";attack_success={r.extras['attack_success']:.4f}"
+        emit(f"fig7_10/{task_name}/{abnormal}{num}/{name}",
+             (t["s"] / iterations) * 1e6, extra)
+    return res

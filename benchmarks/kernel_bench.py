@@ -1,0 +1,45 @@
+"""Kernel micro-bench: Pallas (interpret on CPU) + jnp reference timings.
+
+On this CPU container the absolute numbers are NOT TPU times; the table
+establishes correctness-at-scale and the block-shape sweep used to pick
+BlockSpecs (EXPERIMENTS.md §Perf discusses the VMEM reasoning).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # fedavg: k x N streaming reduction (Eq. 1 hot spot)
+    for k, n in ((2, 1 << 20), (8, 1 << 20)):
+        w = jax.nn.softmax(jax.random.normal(key, (k,)))
+        m = jax.random.normal(key, (k, n), jnp.float32)
+        us_ref = _time(lambda: ref.fedavg_ref(w, m))
+        us_pal = _time(lambda: ops.fedavg(w, m))
+        emit(f"kernel/fedavg/k{k}_n{n}", us_pal, f"jnp_ref_us={us_ref:.0f}")
+
+    # model distance
+    m = jax.random.normal(key, (6, 1 << 19), jnp.float32)
+    emit("kernel/model_distance/k6", _time(lambda: ops.model_distance(m)),
+         f"jnp_ref_us={_time(lambda: ref.model_distance_ref(m)):.0f}")
+
+    # flash attention (small shapes; interpret mode is slow by design)
+    B, H, KV, S, hd = 1, 4, 2, 256, 64
+    q = jax.random.normal(key, (B, H, S, hd)) * 0.3
+    kk = jax.random.normal(key, (B, KV, S, hd)) * 0.3
+    vv = jax.random.normal(key, (B, KV, S, hd))
+    emit("kernel/flash_attention/s256", _time(lambda: ops.flash_attention(q, kk, vv)),
+         f"jnp_ref_us={_time(lambda: ref.mqa_attention_ref(q, kk, vv)):.0f}")

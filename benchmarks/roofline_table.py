@@ -1,0 +1,39 @@
+"""Roofline table: reads the dry-run artifact (benchmarks/artifacts/*.jsonl)
+written by ``python -m repro.launch.dryrun --all --jsonl ...`` and prints the
+three roofline terms per (arch x shape x mesh).
+
+(The dry-run itself needs 512 host devices and must run in its own process;
+this bench only formats its artifact.)
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+ARTIFACTS = [
+    os.path.join(os.path.dirname(__file__), "artifacts", "dryrun_single.jsonl"),
+    os.path.join(os.path.dirname(__file__), "artifacts", "dryrun_multi.jsonl"),
+]
+
+
+def run():
+    found = False
+    for path in ARTIFACTS:
+        if not os.path.exists(path):
+            continue
+        found = True
+        rows = [json.loads(l) for l in open(path) if l.strip()]
+        # keep the newest row per (arch, shape, mesh)
+        latest = {}
+        for r in rows:
+            latest[(r["arch"], r["shape"], r["mesh"])] = r
+        for (arch, shape, mesh), r in sorted(latest.items()):
+            emit(
+                f"roofline/{mesh}/{arch}/{shape}",
+                r.get("compile_s", 0.0) * 1e6,
+                f"t_compute={r['t_compute_s']};t_memory={r['t_memory_s']};"
+                f"t_collective={r['t_collective_s']};dominant={r['dominant']};"
+                f"useful_flops_ratio={round(r.get('useful_flops_ratio', 0), 3)}",
+            )
+    if not found:
+        emit("roofline/SKIPPED", 0.0, "run repro.launch.dryrun --all --jsonl first")

@@ -1,0 +1,88 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+Scale note: the simulation benches run the paper's experiments at bench
+scale (100 nodes, 300-400 iterations vs the paper's 5000-10000, scaled-down
+CNN/LSTM on synthetic data) — trends and orderings are the reproduction
+target; see EXPERIMENTS.md.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import header
+from benchmarks import (
+    ablation_weighted,
+    fig5_ideal_convergence,
+    fig6_11_abnormal_nodes,
+    kernel_bench,
+    roofline_table,
+    stability_tips,
+    table2_iteration_delay,
+    table3_attack_success,
+    table4_contribution_rates,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced iteration counts")
+    ap.add_argument("--only", help="run a single bench by prefix")
+    args = ap.parse_args()
+
+    # defaults sized for the CPU container (~45 min total); the paper-scale
+    # sweep is the same code with larger counts (EXPERIMENTS.md notes scale)
+    iters_long = 150 if args.quick else 250
+    iters_mid = 100 if args.quick else 200
+    # the LSTM task's sequential 80-step scan is ~4x the CNN cost per
+    # iteration on CPU; its benches run shorter (trend-sufficient)
+    iters_lstm = 60 if args.quick else 150
+    counts = (20,) if args.quick else (5, 20)
+
+    benches = [
+        ("stability", lambda: stability_tips.run()),
+        ("kernels", lambda: kernel_bench.run()),
+        ("table2", lambda: (
+            table2_iteration_delay.run("cnn", 100),
+            table2_iteration_delay.run("lstm", 100),
+        )),
+        ("fig5", lambda: (
+            fig5_ideal_convergence.run("cnn", iters_long),
+            fig5_ideal_convergence.run("lstm", iters_lstm),
+        )),
+        ("fig6", lambda: fig6_11_abnormal_nodes.run_dagfl_sweep("cnn", iters_mid, counts=counts)),
+        ("fig7_10", lambda: (
+            fig6_11_abnormal_nodes.run_four_systems("cnn", "lazy", 20, iters_mid),
+            fig6_11_abnormal_nodes.run_four_systems("cnn", "poisoning", 20, iters_mid),
+            fig6_11_abnormal_nodes.run_four_systems("cnn", "backdoor", 20, iters_mid),
+            fig6_11_abnormal_nodes.run_four_systems("lstm", "poisoning", 20, iters_lstm),
+        )),
+        ("table3", lambda: table3_attack_success.run(iters_mid)),
+        ("table4", lambda: table4_contribution_rates.run("cnn", iters_mid, counts=counts)),
+        ("ablation", lambda: ablation_weighted.run(150 if args.quick else 200)),
+        ("roofline", lambda: roofline_table.run()),
+    ]
+
+    header()
+    failures = []
+    t0 = time.time()
+    for name, fn in benches:
+        if args.only and not name.startswith(args.only):
+            continue
+        try:
+            fn()
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print(f"# total_bench_time_s,{time.time()-t0:.1f}")
+    if failures:
+        for f in failures:
+            print(f"# FAILED,{f[0]},{f[1]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""§IV Eq. (4): equilibrium tip count — closed form vs Poisson simulation."""
+from benchmarks.common import emit, timed
+from repro.configs.base import DagFLConfig
+from repro.core import stability
+
+
+def run(seed: int = 0):
+    rows = {}
+    for k, alpha in ((2, 5), (3, 5), (4, 6)):
+        cfg = DagFLConfig(num_nodes=100, alpha=alpha, k=k)
+        f = 1.5e9
+        pred = stability.equilibrium_tips(cfg, f)
+        with timed() as t:
+            trace = stability.simulate_tip_count(cfg, horizon=2000.0, seed=seed, f=f)
+        sim = trace.tail_mean(0.5)
+        rows[k] = (pred, sim)
+        emit(
+            f"stability/eq4/k{k}_alpha{alpha}",
+            t["s"] * 1e6,
+            f"L0_pred={pred:.2f};L0_sim={sim:.2f};rel_err={abs(sim-pred)/pred:.3f}",
+        )
+    return rows

@@ -1,0 +1,35 @@
+"""Anomaly detection demo: 20% poisoning nodes vs DAG-FL's consensus.
+
+    PYTHONPATH=src python examples/federated_anomaly.py
+
+Reproduces the Table-IV mechanism live: poisoned transactions get isolated
+(low approval counts) and their publishers' contribution rates collapse,
+while Google FL (no defense) loses accuracy on the same population.
+"""
+import numpy as np
+
+from repro.fl.experiments import abnormal_experiment
+
+
+def main():
+    res = abnormal_experiment(
+        "cnn", abnormal="poisoning", num_abnormal=8,
+        iterations=250, seed=0, systems=("dagfl", "google"),
+    )
+    dag = res["dagfl"]
+    goo = res["google"]
+    print(f"final accuracy: DAG-FL={dag.accs[-1]:.3f}  Google FL={goo.accs[-1]:.3f}")
+
+    behaviors = np.asarray(dag.extras["behaviors"])
+    rates = dag.extras["contribution_m0"][: len(behaviors)]
+    bad = rates[behaviors == "poisoning"]
+    good = rates[behaviors == "normal"]
+    print(f"contribution rate: poisoning r0={bad.mean():.3f}  normal={good.mean():.3f}  "
+          f"ratio={bad.mean()/good.mean():.3f}")
+    flagged = (rates < 0.5 * good.mean()) & (behaviors == "poisoning")
+    print(f"detected {flagged.sum()}/{(behaviors=='poisoning').sum()} poisoning nodes "
+          f"at the 0.5*r threshold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Launch-script example: the multi-pod dry-run for one (arch x shape).
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch olmo-1b \
+        --shape train_4k --mesh both
+
+Thin wrapper over ``repro.launch.dryrun`` (which must own the process:
+XLA device count is locked at first jax init).
+"""
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    args = sys.argv[1:] or ["--arch", "olmo-1b", "--shape", "train_4k", "--mesh", "single"]
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.dryrun", *args], env=env, cwd=repo
+    ))

@@ -1,0 +1,65 @@
+"""§V.B testbed analogue: 5 worker nodes + a host controller (Fig. 12/13).
+
+    PYTHONPATH=src python examples/testbed_five_nodes.py
+
+The paper deploys 5 Alibaba-cloud nodes + a host running DAG-FL Controlling;
+here the 5 nodes are processes-in-one (the event loop serializes their
+iterations) with IID-ish local data and high "bandwidth" (no wireless model),
+mirroring the testbed conditions. Expected (Fig. 13): DAG-FL on 5 nodes
+reaches higher accuracy than single-node training under the same number of
+per-node iterations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DagFLConfig
+from repro.core import Controller, make_dagfl_iteration
+from repro.data import MnistLike, paper_partition
+from repro.fl.tasks import bench_cnn_task
+
+
+def main():
+    task = bench_cnn_task()
+    gen = MnistLike(image_size=16, seed=0)
+    rng = np.random.default_rng(0)
+    val = gen.balanced(rng, 256)
+    vb = {"x": jnp.asarray(val.x), "y": jnp.asarray(val.y)}
+    iterations = 100
+
+    # --- single-node baseline (same per-node data budget) ------------------
+    nodes = paper_partition(gen, 5, shard_size=40, uniform_per_node=40, seed=1)
+    solo = task.init(jax.random.PRNGKey(0))
+    tf = jax.jit(task.train_fn)
+    ef = jax.jit(task.eval_fn)
+    ds0 = nodes[0]
+    for i in range(iterations // 5):
+        idx = rng.integers(0, len(ds0.y), 32)
+        solo, _ = tf(solo, {"x": jnp.asarray(ds0.x[idx]), "y": jnp.asarray(ds0.y[idx])},
+                     jax.random.PRNGKey(i))
+    solo_acc = float(ef(solo, vb))
+
+    # --- DAG-FL on 5 nodes --------------------------------------------------
+    cfg = DagFLConfig(num_nodes=5, capacity=64, alpha=3, k=2, tau_max=60.0)
+    ctrl = Controller(cfg, task.eval_fn, target_accuracy=0.95)
+    state = ctrl.genesis(task.init(jax.random.PRNGKey(0)), vb)
+    it_fn = jax.jit(make_dagfl_iteration(cfg, task.eval_fn, task.train_fn))
+    dag, bank = state.dag, state.bank
+    for i in range(iterations):
+        nid = i % 5
+        ds = nodes[nid]
+        idx = rng.integers(0, len(ds.y), 32)
+        out = it_fn(dag, bank, nid, float(i) + 1.0, jax.random.PRNGKey(i),
+                    {"x": jnp.asarray(ds.x[idx]), "y": jnp.asarray(ds.y[idx])}, vb)
+        dag, bank = out.dag, out.bank
+    state.dag, state.bank = dag, bank
+    state = ctrl.check(state, jax.random.PRNGKey(9), iterations + 1.0, vb)
+
+    print(f"single node ({iterations//5} iters): acc={solo_acc:.3f}")
+    print(f"DAG-FL 5 nodes ({iterations} iters, {iterations//5}/node): "
+          f"acc={state.best_accuracy:.3f}")
+    print("testbed expectation (Fig. 13): DAG-FL >= single node", )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Render the dry-run jsonl artifacts into the EXPERIMENTS.md roofline table."""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ART = os.path.join(REPO, "benchmarks", "artifacts")
+
+
+def load(path):
+    if not os.path.exists(path):
+        return {}
+    latest = {}
+    for line in open(path):
+        if line.strip():
+            r = json.loads(line)
+            latest[(r["arch"], r["shape"], r.get("opt", False))] = r
+    return latest
+
+
+def fmt_row(r):
+    mf = r.get("model_flops", 0.0)
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['step']} | "
+        f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+        f"**{r['dominant']}** | {r.get('useful_flops_ratio', 0):.3f} | "
+        f"{r.get('peak_bytes', 0)/1e9:.1f} |"
+    )
+
+
+def main():
+    single = load(os.path.join(ART, "dryrun_single.jsonl"))
+    multi = load(os.path.join(ART, "dryrun_multi.jsonl"))
+
+    lines = []
+    lines.append("### Single pod (16x16 = 256 chips) — baseline, seconds/step/device\n")
+    lines.append("| arch | shape | step | t_compute | t_memory | t_collective | dominant | useful/HLO | peak GB/dev |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        lines.append(fmt_row(single[key]))
+    if multi:
+        lines.append("\n### Multi-pod (2x16x16 = 512 chips) — compile proof + terms\n")
+        lines.append("| arch | shape | step | t_compute | t_memory | t_collective | dominant | useful/HLO | peak GB/dev |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for key in sorted(multi):
+            lines.append(fmt_row(multi[key]))
+    table = "\n".join(lines)
+
+    out = os.path.join(ART, "roofline_single.md")
+    with open(out, "w") as f:
+        f.write(table + "\n")
+    print(f"wrote {out}")
+
+    exp = os.path.join(REPO, "EXPERIMENTS.md")
+    text = open(exp).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, table, 1)
+        open(exp, "w").write(text)
+        print("inserted table into EXPERIMENTS.md")
+    else:
+        print("marker not found in EXPERIMENTS.md (already filled?)")
+
+
+if __name__ == "__main__":
+    main()

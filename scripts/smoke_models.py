@@ -1,0 +1,49 @@
+"""Dev script: run every reduced arch through forward/train/prefill/decode."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, TrainConfig
+from repro.models import build_model
+from repro.optim import init_optimizer
+
+B, S = 2, 16
+
+
+def run(name):
+    cfg = ARCHS[name].reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend_tokens:
+        batch["frontend"] = jax.random.normal(key, (B, cfg.frontend_tokens, cfg.frontend_dim))
+
+    logits, aux = model.forward(params, tokens, batch.get("frontend"))
+    assert logits.shape == (B, S + cfg.frontend_tokens, cfg.vocab_size), logits.shape
+    assert jnp.all(jnp.isfinite(logits)), "NaN in forward"
+
+    tc = TrainConfig(optimizer="sgd", learning_rate=0.01)
+    opt = init_optimizer(tc, params)
+    p2, opt2, metrics = model.train_step(tc, params, opt, batch, 0.01)
+    assert jnp.isfinite(metrics["loss"]), "NaN loss"
+
+    # prefill + decode
+    lg, cache = model.prefill(
+        params, tokens, batch.get("frontend"), cache_len=S + cfg.frontend_tokens + 4
+    )
+    assert jnp.all(jnp.isfinite(lg))
+    tok = tokens[:, -1:]
+    lg2, cache = model.decode_step(params, tok, cache)
+    assert lg2.shape == (B, 1, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(lg2)), "NaN decode"
+    print(f"OK {name:22s} params={n/1e6:6.2f}M loss={float(metrics['loss']):.3f}")
+
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or sorted(ARCHS)
+    for nm in names:
+        run(nm)

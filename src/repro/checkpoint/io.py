@@ -1,0 +1,59 @@
+"""Checkpointing: DAG state + model bank + params as .npz + msgpack meta.
+
+Pytrees are flattened with jax.tree_util key-paths so restore round-trips
+exact structures (dicts, NamedTuples, lists). No external deps beyond numpy
+and msgpack.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_pytree(path: str, tree: Any, meta: Optional[Dict] = None) -> None:
+    """Serialize an arbitrary pytree of arrays to ``<path>.npz``."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {f"leaf{i}": np.asarray(v) for i, (_, v) in enumerate(flat)}
+    keys = [_keystr(p) for p, _ in flat]
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    np.savez(path, __keys__=np.array(json.dumps(keys)), **arrays)
+    if meta is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (leaf order must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path, allow_pickle=False)
+    keys = json.loads(str(data["__keys__"]))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    t_keys = [_keystr(p) for p, _ in flat_t]
+    if keys != t_keys:
+        raise ValueError(
+            f"checkpoint structure mismatch: {len(keys)} leaves vs {len(t_keys)}; "
+            f"first diff: {next((a, b) for a, b in zip(keys, t_keys) if a != b)}"
+        )
+    leaves = [data[f"leaf{i}"] for i in range(len(keys))]
+    cast = [
+        np.asarray(l, dtype=t.dtype) if hasattr(t, "dtype") else l
+        for l, (_, t) in zip(leaves, flat_t)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, cast)
+
+
+def load_meta(path: str) -> Optional[Dict]:
+    p = path + ".meta.json"
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None

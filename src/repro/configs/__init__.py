@@ -1,0 +1,33 @@
+from repro.configs.base import (
+    DagFLConfig,
+    ModelConfig,
+    RunConfig,
+    SHAPES,
+    ShapeSpec,
+    TrainConfig,
+)
+from repro.configs.registry import (
+    ARCHS,
+    POD_GRANULARITY,
+    get_arch,
+    get_shape,
+    list_archs,
+    long_context_variant,
+    pairs_for_dryrun,
+)
+
+__all__ = [
+    "DagFLConfig",
+    "ModelConfig",
+    "RunConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "TrainConfig",
+    "ARCHS",
+    "POD_GRANULARITY",
+    "get_arch",
+    "get_shape",
+    "list_archs",
+    "long_context_variant",
+    "pairs_for_dryrun",
+]

@@ -1,0 +1,68 @@
+"""Anomaly detection (§V.4 + §VI.B): contribution rates and credit scores.
+
+The paper's detector: a transaction with <= m approvals is *isolated*; a
+node's contribution rate r = contributing / published. Abnormal nodes show
+r0 / r well below 1 (Table IV). ``credit_scores`` implements the §VI.B
+extension (tips from low-credit nodes get down-weighted during selection),
+and ``parameter_outlier_scores`` the §VI.A-style model-space validation
+using the pairwise-distance Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dag import DagState
+from repro.kernels import ops as kops
+
+
+class ContributionReport(NamedTuple):
+    rates: jnp.ndarray          # (N,) per-node contribution rate
+    mean_rate: jnp.ndarray      # ()   r   (all nodes)
+    flagged: jnp.ndarray        # (N,) bool — below threshold
+
+
+def contribution_rates(dag: DagState, m: int = 0) -> jnp.ndarray:
+    contrib = dag.contributing_m0 if m == 0 else dag.contributing_m1
+    pub = jnp.maximum(dag.published_per_node, 1)
+    return contrib.astype(jnp.float32) / pub.astype(jnp.float32)
+
+
+def contribution_report(
+    dag: DagState, m: int = 0, flag_fraction: float = 0.5
+) -> ContributionReport:
+    rates = contribution_rates(dag, m)
+    active = dag.published_per_node > 0
+    mean = jnp.sum(jnp.where(active, rates, 0.0)) / jnp.maximum(jnp.sum(active), 1)
+    flagged = active & (rates < flag_fraction * mean)
+    return ContributionReport(rates, mean, flagged)
+
+
+def credit_scores(dag: DagState, m: int = 0, floor: float = 0.05) -> jnp.ndarray:
+    """§VI.B: per-node credit in [floor, 1], proportional to contribution."""
+    rates = contribution_rates(dag, m)
+    mean = jnp.maximum(jnp.mean(rates), 1e-6)
+    return jnp.clip(rates / mean, floor, 1.0)
+
+
+def credit_weighted_tip_scores(
+    dag: DagState, tip_scores: jnp.ndarray, credits: jnp.ndarray
+) -> jnp.ndarray:
+    """Scale gumbel tip-selection scores by the publisher's credit."""
+    pub = jnp.maximum(dag.publisher, 0)
+    c = credits[pub]
+    return tip_scores + jnp.log(jnp.where(dag.publisher >= 0, c, 1.0))
+
+
+def parameter_outlier_scores(flat_models: jnp.ndarray) -> jnp.ndarray:
+    """§VI.A-style model-space screening of candidate tips.
+
+    flat_models (k, N) -> (k,) mean distance to the other candidates;
+    poisoned models sit far from the normal cluster.
+    """
+    d = kops.model_distance(flat_models)                  # (k, k)
+    k = d.shape[0]
+    off = jnp.where(jnp.eye(k, dtype=bool), 0.0, d)
+    return jnp.sum(off, axis=1) / jnp.maximum(k - 1, 1)

@@ -1,0 +1,168 @@
+"""The DAG ledger: fixed-capacity struct-of-arrays, fully jittable.
+
+Transactions are rows of parallel arrays; approvals are index edges that
+always point to OLDER rows (acyclicity by construction). Capacity is a ring:
+slots older than ``tau_max`` can never be tips again (§IV.B), so evicting
+the oldest row is semantically safe; per-node contribution statistics are
+kept as cumulative counters (updated the moment a transaction crosses the
+``m`` approvals threshold) so Table-IV metrics survive eviction.
+
+The model payload of each transaction lives in a separate "model bank"
+(see ``repro.core.bank``); rows store only the bank slot.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NO_TX = jnp.int32(-1)
+
+
+class DagState(NamedTuple):
+    publisher: jnp.ndarray          # (cap,) int32  node id, -1 = empty
+    publish_time: jnp.ndarray       # (cap,) f32
+    approvals: jnp.ndarray          # (cap, k) int32 indices approved by row
+    approval_count: jnp.ndarray     # (cap,) int32  times row was approved
+    accuracy: jnp.ndarray           # (cap,) f32    validation accuracy at publish
+    auth_tag: jnp.ndarray           # (cap,) f32    integrity checksum of payload
+    model_slot: jnp.ndarray         # (cap,) int32  index into the model bank
+    count: jnp.ndarray              # () int32      total ever published
+    # cumulative per-node stats (Table IV), for isolation thresholds m=0,1
+    published_per_node: jnp.ndarray     # (N,) int32
+    contributing_m0: jnp.ndarray        # (N,) int32  rows that got > 0 approvals
+    contributing_m1: jnp.ndarray        # (N,) int32  rows that got > 1 approvals
+
+
+def empty_dag(capacity: int, k: int, num_nodes: int) -> DagState:
+    return DagState(
+        publisher=jnp.full((capacity,), NO_TX, jnp.int32),
+        publish_time=jnp.zeros((capacity,), jnp.float32),
+        approvals=jnp.full((capacity, k), NO_TX, jnp.int32),
+        approval_count=jnp.zeros((capacity,), jnp.int32),
+        accuracy=jnp.zeros((capacity,), jnp.float32),
+        auth_tag=jnp.zeros((capacity,), jnp.float32),
+        model_slot=jnp.full((capacity,), NO_TX, jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        published_per_node=jnp.zeros((num_nodes,), jnp.int32),
+        contributing_m0=jnp.zeros((num_nodes,), jnp.int32),
+        contributing_m1=jnp.zeros((num_nodes,), jnp.int32),
+    )
+
+
+def capacity_of(dag: DagState) -> int:
+    return dag.publisher.shape[0]
+
+
+def publish(
+    dag: DagState,
+    publisher: jnp.ndarray,      # () int32
+    time: jnp.ndarray,           # () f32
+    approvals: jnp.ndarray,      # (k,) int32, NO_TX padded
+    accuracy: jnp.ndarray,       # () f32
+    auth_tag: jnp.ndarray,       # () f32
+    model_slot: jnp.ndarray,     # () int32
+) -> DagState:
+    """Append a transaction (Algorithm 2 stage 4) and credit approvals."""
+    cap = capacity_of(dag)
+    row = jnp.mod(dag.count, cap)
+
+    # credit each approved transaction; track threshold crossings
+    def credit(carry, tx):
+        ac, c0, c1 = carry
+        ok = tx >= 0
+        idx = jnp.maximum(tx, 0)
+        old = ac[idx]
+        ac = ac.at[idx].add(jnp.where(ok, 1, 0))
+        pub = dag.publisher[idx]
+        crossed0 = ok & (old == 0) & (pub >= 0)
+        crossed1 = ok & (old == 1) & (pub >= 0)
+        safe_pub = jnp.maximum(pub, 0)
+        c0 = c0.at[safe_pub].add(jnp.where(crossed0, 1, 0))
+        c1 = c1.at[safe_pub].add(jnp.where(crossed1, 1, 0))
+        return (ac, c0, c1), None
+
+    (ac, c0, c1), _ = jax.lax.scan(
+        credit, (dag.approval_count, dag.contributing_m0, dag.contributing_m1), approvals
+    )
+
+    return DagState(
+        publisher=dag.publisher.at[row].set(publisher.astype(jnp.int32)),
+        publish_time=dag.publish_time.at[row].set(time.astype(jnp.float32)),
+        approvals=dag.approvals.at[row].set(approvals.astype(jnp.int32)),
+        approval_count=ac.at[row].set(0),
+        accuracy=dag.accuracy.at[row].set(accuracy.astype(jnp.float32)),
+        auth_tag=dag.auth_tag.at[row].set(auth_tag.astype(jnp.float32)),
+        model_slot=dag.model_slot.at[row].set(model_slot.astype(jnp.int32)),
+        count=dag.count + 1,
+        published_per_node=dag.published_per_node.at[publisher].add(1),
+        contributing_m0=c0,
+        contributing_m1=c1,
+    )
+
+
+def tip_mask(dag: DagState, now: jnp.ndarray, tau_max: float) -> jnp.ndarray:
+    """Tips (§II.B / §IV.B): occupied, unapproved, staleness <= tau_max."""
+    fresh = (now - dag.publish_time) <= tau_max
+    return (dag.publisher >= 0) & (dag.approval_count == 0) & fresh
+
+
+def select_tips(
+    dag: DagState,
+    key: jnp.ndarray,
+    alpha: int,
+    now: jnp.ndarray,
+    tau_max: float,
+    node_bias=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample up to alpha tips without replacement (stage 1).
+
+    Returns (idx (alpha,) int32 with NO_TX padding, num_valid ()).
+    Gumbel top-k gives an exact uniform sample under jit. ``node_bias``
+    ((num_nodes+1,) log-weights indexed by publisher) skews the draw —
+    used by §VI.B credit-weighted selection and by the simulator's
+    backdoor JOINT attack (§V.A.4).
+    """
+    mask = tip_mask(dag, now, tau_max)
+    cap = capacity_of(dag)
+    gumbel = -jnp.log(-jnp.log(jax.random.uniform(key, (cap,), minval=1e-9, maxval=1.0)))
+    if node_bias is not None:
+        gumbel = gumbel + node_bias[jnp.maximum(dag.publisher, 0)]
+    scores = jnp.where(mask, gumbel, -jnp.inf)
+    top_scores, top_idx = jax.lax.top_k(scores, alpha)
+    ok = jnp.isfinite(top_scores)
+    idx = jnp.where(ok, top_idx, NO_TX).astype(jnp.int32)
+    return idx, jnp.sum(ok.astype(jnp.int32))
+
+
+def num_tips(dag: DagState, now: jnp.ndarray, tau_max: float) -> jnp.ndarray:
+    return jnp.sum(tip_mask(dag, now, tau_max).astype(jnp.int32))
+
+
+def isolated_mask(dag: DagState, m: int) -> jnp.ndarray:
+    """Transactions with <= m approvals are isolated (§V.4)."""
+    return (dag.publisher >= 0) & (dag.approval_count <= m)
+
+
+def merge(local: DagState, remote: DagState) -> DagState:
+    """Gossip reconciliation: adopt the longer history (row-wise max merge).
+
+    Both replicas share the append order (publish is serialized through the
+    global ledger in the runtime), so the element-wise maximum of counters
+    plus preferring rows from the longer chain reproduces §III.A's
+    "local DAG updated by communicating with adjacent nodes".
+    """
+    take_remote = remote.count > local.count
+
+    def pick(a, b):
+        return jnp.where(take_remote, b, a)
+
+    picked = jax.tree_util.tree_map(pick, local, remote)
+    # approval counts / contribution counters advance monotonically: take max
+    return picked._replace(
+        approval_count=jnp.maximum(local.approval_count, remote.approval_count)
+        * (picked.publisher >= 0),
+        contributing_m0=jnp.maximum(local.contributing_m0, remote.contributing_m0),
+        contributing_m1=jnp.maximum(local.contributing_m1, remote.contributing_m1),
+    )

@@ -1,0 +1,50 @@
+"""Stage-2 validation: authenticate tips + score their models (consensus).
+
+``make_validator(eval_fn)`` builds a jittable function that, given the model
+bank and alpha candidate slots, returns per-candidate accuracy — a single
+vmapped forward pass over the candidate axis. The paper validates with a
+small local test set (Section III.B); the same hook accepts any scorer
+(e.g. the autoencoder idea of §VI.A).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bank as bank_lib
+
+
+def make_validator(eval_fn: Callable[[Any, Any], jnp.ndarray]):
+    """eval_fn(params, batch) -> scalar accuracy in [0, 1]."""
+
+    def validate(model_bank, slots: jnp.ndarray, batch) -> jnp.ndarray:
+        """slots (alpha,) int32 (NO_TX padded) -> accuracies (alpha,) f32.
+
+        Invalid slots score -inf so top-k never picks them.
+        """
+        cands = bank_lib.bank_gather(model_bank, slots)
+        accs = jax.vmap(lambda p: eval_fn(p, batch))(cands)
+        return jnp.where(slots >= 0, accs.astype(jnp.float32), -jnp.inf)
+
+    return validate
+
+
+def authenticate(dag_tags: jnp.ndarray, model_bank, slots: jnp.ndarray) -> jnp.ndarray:
+    """Recompute payload checksums and compare with the published tags."""
+    cands = bank_lib.bank_gather(model_bank, slots)
+    tags = jax.vmap(bank_lib.auth_checksum)(cands)
+    stored = dag_tags[jnp.maximum(slots, 0)]
+    ok = jnp.abs(tags - stored) <= 1e-3 * (1.0 + jnp.abs(stored))
+    return ok & (slots >= 0)
+
+
+def select_top_k(accuracies: jnp.ndarray, slots: jnp.ndarray, k: int):
+    """Stage 3: keep the k highest-accuracy validated tips.
+
+    Returns (chosen slots (k,), their dag rows? caller keeps mapping, gates).
+    """
+    top_acc, top_pos = jax.lax.top_k(accuracies, k)
+    chosen = jnp.where(jnp.isfinite(top_acc), slots[top_pos], -1)
+    return chosen.astype(jnp.int32), top_pos, top_acc

@@ -1,0 +1,25 @@
+from repro.data.pipeline import MinibatchSampler, TokenSampler, lines_to_batches
+from repro.data.synthetic import (
+    CharCorpus,
+    ImageDataset,
+    MnistLike,
+    NUM_CLASSES,
+    VOCAB,
+    add_backdoor_trigger,
+    char_partition,
+    paper_partition,
+)
+
+__all__ = [
+    "MinibatchSampler",
+    "TokenSampler",
+    "lines_to_batches",
+    "CharCorpus",
+    "ImageDataset",
+    "MnistLike",
+    "NUM_CLASSES",
+    "VOCAB",
+    "add_backdoor_trigger",
+    "char_partition",
+    "paper_partition",
+]

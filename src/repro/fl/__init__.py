@@ -1,0 +1,24 @@
+from repro.fl.latency import LatencyModel
+from repro.fl.nodes import (
+    SimNode,
+    backdoor_eval_set,
+    build_char_population,
+    build_population,
+)
+from repro.fl.systems import SYSTEMS, SimConfig, SimResult
+from repro.fl.tasks import CNNTask, LSTMTask, bench_cnn_task, bench_lstm_task
+
+__all__ = [
+    "LatencyModel",
+    "SimNode",
+    "backdoor_eval_set",
+    "build_char_population",
+    "build_population",
+    "SYSTEMS",
+    "SimConfig",
+    "SimResult",
+    "CNNTask",
+    "LSTMTask",
+    "bench_cnn_task",
+    "bench_lstm_task",
+]

@@ -1,0 +1,202 @@
+"""The paper's two FL task models (Section V.A), in JAX.
+
+* CNN: 2x (5x5 conv -> 2x2 maxpool) -> FC(512) ReLU -> softmax(10)
+  (McMahan et al. 2017 MNIST CNN, lr 0.002, cross-entropy).
+* LSTM: 8-dim char embedding -> 2x LSTM(256) -> softmax per char
+  (the stacked character LSTM, lr 0.3 in the paper).
+
+Each task exposes the interface DAG-FL core consumes:
+  init(key) -> params
+  eval_fn(params, batch) -> accuracy in [0,1]
+  train_fn(params, batch, key) -> (params, metrics)   # one epoch/minibatch
+Sizes are configurable so benches can run a scaled-down variant on CPU.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softmax_xent
+
+
+# ---------------------------------------------------------------------------
+# CNN task
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CNNTask:
+    image_size: int = 28
+    channels: Tuple[int, int] = (32, 64)
+    kernel: int = 5
+    fc_units: int = 512
+    num_classes: int = 10
+    learning_rate: float = 0.002
+
+    def init(self, key) -> Dict:
+        c1, c2 = self.channels
+        k = self.kernel
+        ks = jax.random.split(key, 4)
+        fm = self.image_size // 4                   # two 2x2 pools
+        fan1 = k * k * 1
+        fan2 = k * k * c1
+        fan3 = fm * fm * c2
+        return {
+            "conv1": jax.random.normal(ks[0], (k, k, 1, c1)) / math.sqrt(fan1),
+            "b1": jnp.zeros((c1,)),
+            "conv2": jax.random.normal(ks[1], (k, k, c1, c2)) / math.sqrt(fan2),
+            "b2": jnp.zeros((c2,)),
+            "fc": jax.random.normal(ks[2], (fan3, self.fc_units)) / math.sqrt(fan3),
+            "bfc": jnp.zeros((self.fc_units,)),
+            "out": jax.random.normal(ks[3], (self.fc_units, self.num_classes))
+            / math.sqrt(self.fc_units),
+            "bout": jnp.zeros((self.num_classes,)),
+        }
+
+    def logits(self, params, x):
+        def conv(h, w, b):
+            h = jax.lax.conv_general_dilated(
+                h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+            h = jax.nn.relu(h + b)
+            return jax.lax.reduce_window(
+                h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+
+        h = conv(x, params["conv1"], params["b1"])
+        h = conv(h, params["conv2"], params["b2"])
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc"] + params["bfc"])
+        return h @ params["out"] + params["bout"]
+
+    def loss(self, params, batch):
+        logits = self.logits(params, batch["x"])
+        return softmax_xent(logits, batch["y"])
+
+    def eval_fn(self, params, batch) -> jnp.ndarray:
+        logits = self.logits(params, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+    def train_fn(self, params, batch, key):
+        loss, grads = jax.value_and_grad(self.loss)(params, batch)
+        params = jax.tree_util.tree_map(
+            lambda p, g: p - self.learning_rate * g, params, grads
+        )
+        return params, {"loss": loss}
+
+    def attack_success_rate(self, params, batch, target_shift: int = 1):
+        """Backdoor metric (Table III): triggered images classified as y+1."""
+        logits = self.logits(params, batch["x"])
+        target = (batch["y"] + target_shift) % self.num_classes
+        return jnp.mean((jnp.argmax(logits, -1) == target).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# LSTM task
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LSTMTask:
+    vocab: int = 90
+    embed_dim: int = 8
+    hidden: int = 256
+    num_layers: int = 2
+    learning_rate: float = 0.3
+
+    def init(self, key) -> Dict:
+        ks = jax.random.split(key, 2 + self.num_layers)
+        params = {
+            "embed": jax.random.normal(ks[0], (self.vocab, self.embed_dim)) * 0.1,
+            "out": jax.random.normal(ks[1], (self.hidden, self.vocab))
+            / math.sqrt(self.hidden),
+            "bout": jnp.zeros((self.vocab,)),
+        }
+        inp = self.embed_dim
+        for l in range(self.num_layers):
+            fan = inp + self.hidden
+            params[f"lstm{l}"] = {
+                "w": jax.random.normal(ks[2 + l], (fan, 4 * self.hidden)) / math.sqrt(fan),
+                "b": jnp.zeros((4 * self.hidden,)),
+            }
+            inp = self.hidden
+        return params
+
+    def _lstm_layer(self, p, xs):
+        """xs: (T, B, in) -> (T, B, hidden)."""
+        B = xs.shape[1]
+        h0 = jnp.zeros((B, self.hidden))
+        c0 = jnp.zeros((B, self.hidden))
+
+        def step(carry, x):
+            h, c = carry
+            z = jnp.concatenate([x, h], axis=-1) @ p["w"] + p["b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        _, hs = jax.lax.scan(step, (h0, c0), xs)
+        return hs
+
+    def logits(self, params, tokens):
+        """tokens (B, T) -> (B, T, V)."""
+        x = params["embed"][tokens]                       # (B,T,E)
+        xs = jnp.moveaxis(x, 1, 0)
+        for l in range(self.num_layers):
+            xs = self._lstm_layer(params[f"lstm{l}"], xs)
+        hs = jnp.moveaxis(xs, 0, 1)
+        return hs @ params["out"] + params["bout"]
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        logits = self.logits(params, tokens)[:, :-1]
+        return softmax_xent(logits, tokens[:, 1:])
+
+    def eval_fn(self, params, batch) -> jnp.ndarray:
+        tokens = batch["tokens"]
+        logits = self.logits(params, tokens)[:, :-1]
+        pred = jnp.argmax(logits, -1)
+        return jnp.mean((pred == tokens[:, 1:]).astype(jnp.float32))
+
+    def train_fn(self, params, batch, key):
+        loss, grads = jax.value_and_grad(self.loss)(params, batch)
+        params = jax.tree_util.tree_map(
+            lambda p, g: p - self.learning_rate * g, params, grads
+        )
+        return params, {"loss": loss}
+
+
+def make_epoch_train(task):
+    """One 'iteration' trains over several minibatches (an epoch, §V.A.1).
+
+    Returns train_fn(params, batch, key) where each leaf of ``batch`` has a
+    leading steps axis; single-step training is scanned over it.
+    """
+
+    def train(params, batch, key):
+        steps = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        keys = jax.random.split(key, steps)
+
+        def body(p, xs):
+            kb, mb = xs
+            p, m = task.train_fn(p, mb, kb)
+            return p, m["loss"]
+
+        params, losses = jax.lax.scan(body, params, (keys, batch))
+        return params, {"loss": losses[-1]}
+
+    return train
+
+
+def bench_cnn_task() -> CNNTask:
+    """Scaled-down CNN for CPU benches (EXPERIMENTS.md notes the scaling)."""
+    return CNNTask(image_size=16, channels=(8, 16), fc_units=64, learning_rate=0.2)
+
+
+def bench_lstm_task() -> LSTMTask:
+    return LSTMTask(hidden=64, num_layers=2, learning_rate=0.3)

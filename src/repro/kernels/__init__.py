@@ -1,0 +1,11 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import decode_attention, fedavg, flash_attention, model_distance
+
+__all__ = [
+    "ops",
+    "ref",
+    "decode_attention",
+    "fedavg",
+    "flash_attention",
+    "model_distance",
+]

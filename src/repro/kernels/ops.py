@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; TPU is
+the compilation TARGET), and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedavg import fedavg_pallas
+from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
+from repro.kernels.model_distance import model_distance_pallas
+from repro.kernels.wkv import wkv_pallas
+from repro.kernels import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fedavg(weights: jnp.ndarray, models: jnp.ndarray, block_n: int = 16384) -> jnp.ndarray:
+    """Eq. (1) weighted model average. weights (k,), models (k, N) -> (N,)."""
+    return fedavg_pallas(weights, models, block_n=block_n, interpret=_interpret_default())
+
+
+def model_distance(models: jnp.ndarray, block_n: int = 16384) -> jnp.ndarray:
+    """Pairwise squared-L2 distances (k, N) -> (k, k)."""
+    return model_distance_pallas(models, block_n=block_n, interpret=_interpret_default())
+
+
+def flash_attention(q, k, v, window: int = 0, block_q: int = 128, block_k: int = 128):
+    """Causal (optionally sliding-window) GQA attention (B,H,S,hd)."""
+    return flash_attention_pallas(
+        q, k, v, window=window, block_q=block_q, block_k=block_k,
+        interpret=_interpret_default(),
+    )
+
+
+def decode_attention(q, k, v, lengths, block_s: int = 512):
+    """Single-token GQA decode attention against an S-slot cache."""
+    return decode_attention_pallas(
+        q, k, v, lengths, block_s=block_s, interpret=_interpret_default()
+    )
+
+
+def wkv(r, k, v, logw, u, chunk: int = 32):
+    """Chunk-parallel RWKV6 WKV recurrence (B,T,H,hd)."""
+    return wkv_pallas(r, k, v, logw, u, chunk=chunk, interpret=_interpret_default())
+
+
+__all__ = ["fedavg", "model_distance", "flash_attention", "decode_attention", "wkv", "ref"]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fedavg_ref(weights: jnp.ndarray, models: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (1): weighted average of k flattened models.
+
+    weights: (k,) f32, models: (k, N) -> (N,) in models.dtype.
+    """
+    out = jnp.einsum("k,kn->n", weights.astype(jnp.float32), models.astype(jnp.float32))
+    return out.astype(models.dtype)
+
+
+def model_distance_ref(models: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared-L2 distance matrix between k flattened models.
+
+    models: (k, N) -> (k, k) f32. Used by anomaly detection (parameter-space
+    outlier scoring of tips).
+    """
+    x = models.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    return sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+
+
+def mqa_attention_ref(
+    q: jnp.ndarray,  # (B, H, S, hd)
+    k: jnp.ndarray,  # (B, KV, S, hd)
+    v: jnp.ndarray,  # (B, KV, S, hd)
+    window: int = 0,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention, GQA head mapping."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    rep = H // KV
+    kk = jnp.repeat(k, rep, axis=1)
+    vv = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window:
+        ok = ok & (j > i - window)
+    scores = jnp.where(ok, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, H, hd)  one query per batch row
+    k: jnp.ndarray,        # (B, S, KV, hd)
+    v: jnp.ndarray,        # (B, S, KV, hd)
+    lengths: jnp.ndarray,  # (B,) int32 — valid cache entries per row
+) -> jnp.ndarray:
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    kk = jnp.repeat(k, rep, axis=2)    # (B, S, H, hd)
+    vv = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, kk).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhs,bshd->bhd", probs, vv)

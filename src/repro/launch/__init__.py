@@ -1,0 +1,5 @@
+# NOTE: do not import repro.launch.dryrun here — it sets XLA_FLAGS at import
+# time and must only be imported as the __main__ entry point.
+from repro.launch import hlo_analysis, mesh, steps
+
+__all__ = ["hlo_analysis", "mesh", "steps"]

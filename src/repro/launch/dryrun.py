@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh, print memory/cost analysis, and emit the roofline terms.
+
+MUST be run as a module entry point (device count is locked at first jax
+init, hence the XLA_FLAGS lines above before any other import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --csv out.csv
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_arch, list_archs, long_context_variant
+from repro.configs.registry import POD_GRANULARITY
+from repro.launch.hlo_analysis import analyze_compiled, model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import plan_for
+
+
+def should_skip(arch: str, shape_name: str) -> str:
+    """Returns a skip reason or '' (DESIGN.md §6 policy)."""
+    return ""   # every assigned arch runs every shape (long_500k via SW/SSM)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True, opt: bool = False):
+    cfg = get_arch(arch)
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    plan = plan_for(cfg, shape, mesh, opt=opt)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            plan.fn,
+            in_shardings=jax.tree_util.tree_map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), plan.in_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            ),
+            out_shardings=jax.tree_util.tree_map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), plan.out_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            ),
+        )
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    info = analyze_compiled(compiled, n_dev)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = model_flops(cfg, tokens, training=(shape.kind == "train"))
+    # the SPMD module is per-device: totals are x n_dev
+    hlo_flops_total = info["flops"] * n_dev
+    useful = mf / hlo_flops_total if hlo_flops_total else float("nan")
+
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "opt": opt,
+        "step": plan.name,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device_flops": info["flops"],
+        "per_device_bytes": info["bytes"],
+        "per_device_coll_bytes": info["collectives"].total_bytes,
+        "collectives": info["collectives"].summary(),
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "xla_flops_uncorrected": info["xla_flops"],
+        "memory": info["memory"],
+    }
+    roof = info["roofline"]
+    row.update({k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in roof.row().items()})
+
+    if verbose:
+        mem = info["memory"]
+        print(f"== {arch} x {shape_name} [{row['mesh']}] step={plan.name} {plan.notes}")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"   memory_analysis: args={mem.get('argument_bytes',0)/1e9:.2f}GB "
+              f"temp={mem.get('temp_bytes',0)/1e9:.2f}GB "
+              f"peak={mem.get('peak_bytes',0)/1e9:.2f}GB (per device)")
+        print(f"   flops/dev={row['per_device_flops']:.3e} (xla uncorrected {row['xla_flops_uncorrected']:.2e}) "
+              f"bytes/dev={row['per_device_bytes']:.3e}")
+        print(f"   collectives: {row['collectives']}")
+        print(f"   roofline: compute={row['t_compute_s']}s memory={row['t_memory_s']}s "
+              f"collective={row['t_collective_s']}s dominant={row['dominant']}")
+        print(f"   MODEL_FLOPS={mf:.3e} useful/HLO={useful:.3f}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jsonl", help="append result rows to this JSONL file")
+    ap.add_argument("--opt", action="store_true", help="apply the §Perf optimization profile")
+    args = ap.parse_args()
+
+    combos = []
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                combos.append((a, s, m))
+
+    failures = []
+    for a, s, m in combos:
+        try:
+            row = run_one(a, s, m, opt=args.opt)
+            if args.jsonl:
+                srow = {k: v for k, v in row.items() if k != "memory"}
+                srow["peak_bytes"] = row["memory"].get("peak_bytes", 0)
+                srow["arg_bytes"] = row["memory"].get("argument_bytes", 0)
+                with open(args.jsonl, "a") as f:
+                    f.write(json.dumps(srow) + "\n")
+        except Exception as e:
+            failures.append((a, s, m, repr(e)))
+            print(f"FAILED {a} x {s} multi_pod={m}: {e}")
+            traceback.print_exc()
+
+    print(f"\n{len(combos) - len(failures)}/{len(combos)} combos compiled")
+    if failures:
+        for f in failures:
+            print("  FAIL:", f)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

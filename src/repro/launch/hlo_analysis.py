@@ -1,0 +1,189 @@
+"""Roofline-term extraction from a lowered/compiled step.
+
+cost_analysis() gives HLO FLOPs and bytes accessed; collective bytes are NOT
+in cost_analysis, so we parse the (optimized) HLO text and sum operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes. Tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}:{self.count_by_kind[k]}x/{self.bytes_by_kind[k]/1e9:.3f}GB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return " ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum OUTPUT shape bytes of every collective op in the HLO.
+
+    Uses the result shape (the `lhs = shape op(...)` form), which bounds the
+    per-device payload for gather-like ops; all-reduce moves ~2x in a ring
+    but we report shape bytes and fold ring factors into the roofline term.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^[%\w\.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(shape_str)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    num_devices: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, num_devices: int) -> Dict:
+    """Extract {flops, bytes, collective bytes, memory} from a compiled step.
+
+    Primary source: the trip-count-aware HLO parser (hlo_parse) — XLA's
+    cost_analysis() counts while bodies once, dropping ~num_layers x of a
+    scanned model's cost (verified; see EXPERIMENTS.md §Dry-run). The raw
+    cost_analysis numbers are kept as `xla_*` cross-check fields.
+    """
+    from repro.launch import hlo_parse
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    parsed = hlo_parse.analyze(hlo)
+    flops = max(parsed.flops, xla_flops)
+    bytes_accessed = max(parsed.bytes, xla_bytes)
+    coll = CollectiveStats(
+        bytes_by_kind={k: int(v) for k, v in parsed.coll.items()},
+        count_by_kind={k: int(v) for k, v in parsed.coll_n.items()},
+    )
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+        }
+    except Exception:
+        pass
+    roof = Roofline(
+        flops=flops, hbm_bytes=bytes_accessed, coll_bytes=float(coll.total_bytes),
+        num_devices=num_devices,
+    )
+    return {
+        "flops": flops,                 # per-device (SPMD module), trip-corrected
+        "bytes": bytes_accessed,
+        "collectives": coll,
+        "memory": mem,
+        "roofline": roof,
+        "xla_flops": xla_flops,
+        "xla_bytes": xla_bytes,
+    }
+
+
+def model_flops(cfg, tokens: int, training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.active_param_count()
+    per_tok = (6 if training else 2) * n
+    return per_tok * tokens

@@ -1,0 +1,34 @@
+"""Mesh construction for the production deployment.
+
+Single pod : (data=16, model=16)            = 256 chips of TPU v5e
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pods: int = 0):
+    """Small host-device mesh for sharding tests (run in a subprocess with
+    --xla_force_host_platform_device_count set)."""
+    if pods:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axis names that act as the data/FL-node dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,279 @@
+"""Step builders + input specs for every (arch x shape x mesh) combination.
+
+``plan(arch, shape, mesh, fl_mode)`` returns a ``StepPlan``:
+  fn            — the jittable step function,
+  args          — ShapeDtypeStruct stand-ins for every input (no allocation),
+  in_specs      — PartitionSpec pytree matching ``args``,
+  out_specs     — PartitionSpecs for outputs (params/caches keep their spec).
+
+Shapes follow the assignment block:
+  train_4k    -> dagfl_train_step (FL archs) / train_step (pod-granularity)
+  prefill_32k -> prefill building the serving cache
+  decode_32k  -> decode_step: ONE token against a seq_len cache
+  long_500k   -> decode_step at 524288 (sub-quadratic variants only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import DagFLConfig, ModelConfig, ShapeSpec, TrainConfig
+from repro.configs.registry import POD_GRANULARITY
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.sharding import fl_step as fl_lib
+from repro.sharding.specs import batch_specs, cache_specs, param_specs
+
+VAL_SEQ = 512      # per-node validation tokens for DAG-FL scoring
+VAL_BATCH = 1
+
+# §Perf optimization profile (dryrun --opt). Baseline stays the default.
+OPT_PROFILE = {
+    "moe_impl": "expert_parallel",   # shard_map all-to-all dispatch
+    "microbatches": 2,         # grad accumulation halves the remat stash
+    "agg_dtype": "bfloat16",   # halves Eq.-1 aggregation collective bytes
+    "val_seq": 128,            # scoring budget (phi_1 knob of the paper)
+    # replicas smaller than this run ONE FL NODE PER DEVICE (no tensor
+    # parallelism): kills the per-layer TP all-reduces that dominate small
+    # archs' collective term, and runs DAG-FL at 256-node scale.
+    "node_per_device_max_bytes": 4e9,
+}
+
+
+@dataclass
+class StepPlan:
+    name: str
+    fn: Callable
+    args: tuple
+    in_specs: tuple
+    out_specs: Any
+    model_cfg: ModelConfig
+    notes: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _eval_params(model, cfg):
+    """Parameter ShapeDtypeStructs without allocating."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _data_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _stack_shapes(tree, n):
+    return jax.tree_util.tree_map(
+        lambda l: _sds((n,) + tuple(l.shape), l.dtype), tree
+    )
+
+
+def _prefix_specs(tree_specs, prefix):
+    return jax.tree_util.tree_map(
+        lambda s: P(*((prefix,) + tuple(s))), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _frontend_sds(cfg: ModelConfig, lead: tuple):
+    if not cfg.frontend_tokens:
+        return None
+    return _sds(lead + (cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# train_4k
+# ---------------------------------------------------------------------------
+
+
+def plan_train(cfg: ModelConfig, shape: ShapeSpec, mesh, fl_mode: Optional[str] = None,
+               opt: bool = False) -> StepPlan:
+    val_seq = VAL_SEQ
+    microbatches = 1
+    agg_dtype = jnp.float32
+    if opt:
+        cfg = dataclasses.replace(cfg, moe_impl=OPT_PROFILE["moe_impl"])
+        val_seq = OPT_PROFILE["val_seq"]
+        microbatches = OPT_PROFILE["microbatches"]
+        agg_dtype = jnp.dtype(OPT_PROFILE["agg_dtype"])
+        if cfg.is_moe():
+            from repro.models.moe import set_shard_map_mesh
+
+            set_shard_map_mesh(mesh)
+    model = build_model(cfg)
+    tcfg = TrainConfig(optimizer="sgd", learning_rate=1e-3, remat=True)
+    dcfg = DagFLConfig()
+    fl = fl_mode if fl_mode is not None else (
+        "pod" if cfg.name in POD_GRANULARITY else "node"
+    )
+    params_sds = _eval_params(model, cfg)
+
+    replica_bytes = cfg.param_count() * 2
+    node_per_device = (
+        opt
+        and fl == "node"
+        and replica_bytes <= OPT_PROFILE["node_per_device_max_bytes"]
+        and shape.global_batch % mesh.size == 0
+    )
+
+    if fl == "node" or (fl == "pod" and "pod" in mesh.axis_names):
+        # ----- DAG-FL step: node-stacked replicas over the data/pod axes ---
+        if node_per_device:
+            # §Perf: one node per device — no tensor parallelism at all
+            N = mesh.size
+            node_axes = tuple(mesh.axis_names)
+        elif fl == "node":
+            N = _data_size(mesh)
+            node_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        else:
+            N = mesh.shape["pod"]
+            node_axes = ("pod",)
+        node_axes = node_axes if len(node_axes) > 1 else node_axes[0]
+        per_node = shape.global_batch // N
+        assert per_node >= 1, f"batch {shape.global_batch} < nodes {N}"
+        if node_per_device:
+            microbatches = 1          # batch/node is already minimal
+
+        step = fl_lib.make_dagfl_train_step(
+            model, cfg, tcfg, dcfg, N,
+            microbatches=microbatches, agg_dtype=agg_dtype,
+            ring_window=(8 if node_per_device else 0),
+        )
+        stacked_params = _stack_shapes(params_sds, N)
+        frontier = jax.eval_shape(lambda: fl_lib.init_frontier(N))
+        batch = {
+            "tokens": _sds((N, per_node, shape.seq_len), jnp.int32),
+            "labels": _sds((N, per_node, shape.seq_len), jnp.int32),
+        }
+        fe = _frontend_sds(cfg, (N, per_node))
+        if fe is not None:
+            batch["frontend"] = fe
+        val = {"tokens": _sds((N, VAL_BATCH, val_seq), jnp.int32)}
+        vfe = _frontend_sds(cfg, (N, VAL_BATCH))
+        if vfe is not None:
+            val["frontend"] = vfe
+        key = _sds((2,), jnp.uint32)
+
+        if node_per_device:
+            # replica fully local: inner dims replicated (= per-device)
+            p_specs = jax.tree_util.tree_map(
+                lambda l: P(*((None,) * l.ndim)), params_sds
+            )
+        else:
+            inner_mode = "model" if fl == "node" else "plain"
+            p_specs = param_specs(cfg, params_sds, mesh, mode=inner_mode)
+        p_specs = _prefix_specs(p_specs, node_axes)
+        f_specs = jax.tree_util.tree_map(lambda l: P(), frontier)
+        b_specs = {
+            k: P(*((node_axes,) + (None,) * (v.ndim - 1))) for k, v in batch.items()
+        }
+        v_specs = {
+            k: P(*((node_axes,) + (None,) * (v.ndim - 1))) for k, v in val.items()
+        }
+        args = (stacked_params, frontier, batch, val, key)
+        in_specs = (p_specs, f_specs, b_specs, v_specs, P(None))
+        out_specs = (p_specs, f_specs, jax.tree_util.tree_map(lambda _: P(), {
+            "mean_val_acc": 0, "selection_entropy": 0}))
+        return StepPlan(
+            f"dagfl_train[{fl}]", step, args, in_specs, out_specs, cfg,
+            notes=f"N={N} per_node_batch={per_node}",
+        )
+
+    # ----- plain train step (pod-granularity arch on a single pod) --------
+    _, update = make_optimizer(tcfg)
+
+    def train_step(params, batch, key):
+        def loss_fn(p):
+            total, metrics = model.loss(p, batch)
+            return total, metrics
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        from repro.optim.optimizers import OptState
+        new_params, _ = update(grads, OptState(jnp.zeros((), jnp.int32), None, None),
+                               params, tcfg.learning_rate)
+        return new_params, dict(metrics, loss=total)
+
+    batch = {
+        "tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32),
+        "labels": _sds((shape.global_batch, shape.seq_len), jnp.int32),
+    }
+    fe = _frontend_sds(cfg, (shape.global_batch,))
+    if fe is not None:
+        batch["frontend"] = fe
+    key = _sds((2,), jnp.uint32)
+    p_specs = param_specs(cfg, params_sds, mesh, mode="plain")
+    b_specs = batch_specs(mesh, batch)
+    args = (params_sds, batch, key)
+    in_specs = (p_specs, b_specs, P(None))
+    out_specs = (p_specs, jax.tree_util.tree_map(lambda _: P(), {
+        "xent": 0, "aux": 0, "loss": 0}))
+    return StepPlan("train", train_step, args, in_specs, out_specs, cfg)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def plan_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh) -> StepPlan:
+    model = build_model(cfg)
+    params_sds = _eval_params(model, cfg)
+
+    def prefill(params, tokens, frontend=None):
+        return model.prefill(params, tokens, frontend,
+                             cache_len=shape.seq_len + cfg.frontend_tokens)
+
+    tokens = _sds((shape.global_batch, shape.seq_len - cfg.frontend_tokens), jnp.int32)
+    fe = _frontend_sds(cfg, (shape.global_batch,))
+    p_specs = param_specs(cfg, params_sds, mesh, mode="plain")
+    t_specs = P(*(("data",) if shape.global_batch % _data_size(mesh) == 0 else (None,))
+                + (None,))
+    # out: (logits, cache)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len + cfg.frontend_tokens)
+    )
+    c_specs = cache_specs(cfg, mesh, cache_sds)
+    out_specs = (P(None, None, "model"), c_specs)
+    args = (params_sds, tokens) + ((fe,) if fe is not None else ())
+    in_specs = (p_specs, t_specs) + ((P(None, None, None),) if fe is not None else ())
+    return StepPlan("prefill", prefill, args, in_specs, out_specs, cfg)
+
+
+def plan_decode(cfg: ModelConfig, shape: ShapeSpec, mesh) -> StepPlan:
+    model = build_model(cfg)
+    params_sds = _eval_params(model, cfg)
+
+    def decode(params, token, cache):
+        return model.decode_step(params, token, cache)
+
+    B = shape.global_batch
+    token = _sds((B, 1), jnp.int32)
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, length=shape.seq_len - 1)
+    )
+    p_specs = param_specs(cfg, params_sds, mesh, mode="plain")
+    c_specs = cache_specs(cfg, mesh, cache_sds)
+    t_spec = P(("data" if B % _data_size(mesh) == 0 and B > 1 else None), None)
+    out_specs = (P(None, None, "model"), c_specs)
+    args = (params_sds, token, cache_sds)
+    in_specs = (p_specs, t_spec, c_specs)
+    return StepPlan("decode", decode, args, in_specs, out_specs, cfg,
+                    notes=f"cache_len={shape.seq_len}")
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeSpec, mesh, fl_mode=None, opt: bool = False) -> StepPlan:
+    if shape.kind == "train":
+        return plan_train(cfg, shape, mesh, fl_mode, opt=opt)
+    if shape.kind == "prefill":
+        return plan_prefill(cfg, shape, mesh)
+    return plan_decode(cfg, shape, mesh)

@@ -1,0 +1,224 @@
+"""GQA/MQA attention with full or sliding-window masking, QK-norm, QKV bias.
+
+Three entry points:
+  * ``attn_forward``      — train/prefill over a whole sequence (optionally
+                            returning the KV cache),
+  * ``attn_decode_step``  — one new token against a cache,
+  * the cache helpers     — full cache (S slots) or ring-buffer window cache.
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, hd); caches (B, S, KV, hd).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, S_cache, KV, hd)
+    v: jnp.ndarray          # (B, S_cache, KV, hd)
+    length: jnp.ndarray     # () int32 — tokens written so far (global position)
+
+
+def attn_init(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    d = cfg.d_model
+    p = {
+        "wq": dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params: dict, x: jnp.ndarray):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def causal_mask(S: int, window: int = 0, dtype=jnp.float32) -> jnp.ndarray:
+    """(S, S) additive mask; window>0 => sliding-window causal."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window:
+        ok = ok & (j > i - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+# q blocks larger than this are processed by the scanned (flash-style) path,
+# bounding score memory to (B, H, CHUNK_Q, S) instead of (B, H, S, S).
+CHUNK_Q = 1024
+
+
+def _grouped_scores(q5, k):
+    """q5 (B,Sq,KV,G,hd) x k (B,Sk,KV,hd) -> (B,KV,G,Sq,Sk) f32 (no repeat)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q5, k).astype(jnp.float32)
+
+
+def sdpa(q, k, v, q_offset, S_total, window: int = 0) -> jnp.ndarray:
+    """Grouped-query attention for one query block.
+
+    q (B,Sq,H,hd), k/v (B,Sk,KV,hd); queries at absolute positions
+    q_offset..q_offset+Sq-1 of a length-S_total causal sequence.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q5 = q.reshape(B, Sq, KV, G, hd)
+    scores = _grouped_scores(q5, k) / jnp.sqrt(jnp.float32(hd))
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok = ok & (kpos > qpos - window)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_sdpa(q, k, v, window: int = 0, block_q: int = CHUNK_Q) -> jnp.ndarray:
+    """Flash-style scan over query blocks: score memory O(bq * S)."""
+    B, S, H, hd = q.shape
+    if S <= block_q:
+        return sdpa(q, k, v, 0, S, window)
+    nb = -(-S // block_q)
+    pad = nb * block_q - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qb = qp.reshape(B, nb, block_q, H, hd)
+
+    def body(_, xs):
+        blk_idx, q_blk = xs
+        out = sdpa(q_blk, k, v, blk_idx * block_q, S, window)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nb), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nb * block_q, H, hd)
+    return out[:, :S]
+
+
+def attn_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jnp.ndarray,
+    positions: Optional[jnp.ndarray] = None,
+    return_cache: bool = False,
+    cache_len: int = 0,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Train/prefill path. Returns (out (B,S,D), cache?)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.window_size if cfg.attention == "sliding_window" else 0
+    out = chunked_sdpa(q, k, v, window)
+    out = out.reshape(B, S, -1) @ params["wo"]
+
+    cache = None
+    if return_cache:
+        slots = cache_len or S
+        if window and slots > window:
+            slots = window
+        if window and S > slots:
+            # ring-buffer layout: global position p lives at slot p % slots
+            tail_k = jax.lax.dynamic_slice_in_dim(k, S - slots, slots, axis=1)
+            tail_v = jax.lax.dynamic_slice_in_dim(v, S - slots, slots, axis=1)
+            ck = jnp.roll(tail_k, S % slots, axis=1)
+            cv = jnp.roll(tail_v, S % slots, axis=1)
+        else:
+            assert slots >= S, f"full-attn cache needs >= {S} slots, got {slots}"
+            ck = jnp.zeros((B, slots) + k.shape[2:], k.dtype)
+            cv = jnp.zeros_like(ck)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, 0, axis=1)
+        cache = KVCache(ck, cv, jnp.asarray(S, jnp.int32))
+    return out, cache
+
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, length: int = 0) -> KVCache:
+    """Cache with ``max_len`` logical context; ring-buffer sized when windowed.
+
+    ``length`` = number of tokens considered already present (the decode
+    dry-run uses length = seq_len - 1: one step appends the seq_len-th token).
+    """
+    hd = cfg.resolved_head_dim()
+    slots = max_len
+    if cfg.attention == "sliding_window":
+        slots = min(max_len, cfg.window_size)
+    k = jnp.zeros((batch, slots, cfg.num_kv_heads, hd), dtype)
+    return KVCache(k, jnp.zeros_like(k), jnp.asarray(length, jnp.int32))
+
+
+def attn_decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    x: jnp.ndarray,              # (B, 1, D)
+    cache: KVCache,
+) -> Tuple[jnp.ndarray, KVCache]:
+    """One token against the cache. Ring buffer when sliding-window."""
+    B = x.shape[0]
+    pos = cache.length                                  # global position
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = _project_qkv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    slots = cache.k.shape[1]
+    slot = jnp.mod(pos, slots) if cfg.attention == "sliding_window" else jnp.minimum(pos, slots - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+
+    # positions of each cache slot (for validity mask)
+    idx = jnp.arange(slots)
+    if cfg.attention == "sliding_window":
+        # slot s holds global position: the latest p <= pos with p % slots == s
+        slot_pos = pos - jnp.mod(pos - idx, slots)
+        valid = (slot_pos >= 0) & (slot_pos >= pos - slots + 1)
+    else:
+        valid = idx <= pos
+    hd = q.shape[-1]
+    KV = ck.shape[2]
+    G = cfg.num_heads // KV
+    qg = q.reshape(B, KV, G, hd)                 # squeeze the length-1 q dim
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, KVCache(ck, cv, pos + 1)

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) mixer for the Zamba2 hybrid (arXiv:2411.15242).
+
+Scalar-per-head A, grouped B/C (ngroups=1), causal conv(4), gated RMSNorm
+before out-projection. Projections are SEPARATE matrices (w_z, w_x, w_B,
+w_C, w_dt) so tensor-parallel sharding can put the head-structured dims
+(din, H) on the ``model`` mesh axis while the small B/C/state matrices stay
+replicated — the TPU-native layout (DESIGN.md §3).
+
+The selective-state recurrence runs as a ``lax.scan`` over time (state
+(H, d_head, N) stays VMEM-resident across steps); decode is the single-step
+recurrence carrying (conv buffer, ssd state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+class MambaState(NamedTuple):
+    conv_x: jnp.ndarray   # (B, K-1, din) conv history for x
+    conv_B: jnp.ndarray   # (B, K-1, N)
+    conv_C: jnp.ndarray   # (B, K-1, N)
+    ssd: jnp.ndarray      # (B, H, d_head, N) f32 recurrent state
+
+
+def mamba_dims(cfg: ModelConfig):
+    din = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads
+    d_head = din // heads
+    N = cfg.ssm_state
+    return din, heads, d_head, N
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    din, H, d_head, N = mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": dense_init(ks[0], d, din, dtype),
+        "w_x": dense_init(ks[1], d, din, dtype),
+        "w_B": dense_init(ks[2], d, N, dtype),
+        "w_C": dense_init(ks[3], d, N, dtype),
+        "w_dt": dense_init(ks[4], d, H, dtype),
+        "conv_x": (jax.random.normal(ks[5], (4, din)) * 0.1).astype(dtype),
+        "conv_xb": jnp.zeros((din,), dtype),
+        "conv_B": (jax.random.normal(ks[6], (4, N)) * 0.1).astype(dtype),
+        "conv_Bb": jnp.zeros((N,), dtype),
+        "conv_C": (jax.random.normal(ks[5], (4, N)) * 0.1).astype(dtype),
+        "conv_Cb": jnp.zeros((N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "gn_scale": jnp.ones((din,), dtype),            # gated RMSNorm
+        "out_proj": dense_init(ks[2], din, d, dtype),
+    }
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, history: jnp.ndarray):
+    """Depthwise causal conv. seq (B,T,C), w (K,C), history (B,K-1,C)."""
+    K = w.shape[0]
+    padded = jnp.concatenate([history, seq], axis=1)     # (B, T+K-1, C)
+    out = sum(padded[:, i : i + seq.shape[1], :] * w[i] for i in range(K))
+    new_hist = padded[:, -(K - 1) :, :]
+    return jax.nn.silu(out + b), new_hist
+
+
+SSD_CHUNK = 64
+
+
+def ssd_chunked(xh, Bm, Cm, dt, A, state, chunk: int = SSD_CHUNK):
+    """Chunked SSD (the Mamba2 paper's algorithm, TPU-adapted).
+
+    Scalar-per-head decay makes the intra-chunk pairwise matrix (B,H,C,C) —
+    no head_dim blowup. Exactly equals ``ssd_scan`` (tests).
+    """
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    nc = T // C
+
+    def resh(x, last):
+        return jnp.moveaxis(x.reshape((B, nc, C) + last).astype(jnp.float32), 1, 0)
+
+    xc = resh(xh, (H, P))
+    bc = resh(Bm, (N,))
+    cc = resh(Cm, (N,))
+    dc = resh(dt, (H,))
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        xb, bb, cb, db = inp                     # (B,C,H,P),(B,C,N),(B,C,N),(B,C,H)
+        a = Af[None, None, :] * db               # (B,C,H) <= 0
+        cum = jnp.cumsum(a, axis=1)              # inclusive
+        # intra: y_t = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t . B_s) x_s
+        expo = cum[:, :, None, :] - cum[:, None, :, :]        # (B,C,C,H)
+        mask = (jnp.arange(C)[:, None] >= jnp.arange(C)[None, :])[None, :, :, None]
+        decay = jnp.where(mask, jnp.exp(expo), 0.0)
+        cb_dot_bb = jnp.einsum("btn,bsn->bts", cb, bb)        # (B,C,C)
+        M = cb_dot_bb[..., None] * decay * db[:, None, :, :]  # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", M, xb)
+        # inter: y_t += exp(cum_t) * C_t . S
+        rd = jnp.exp(cum)                                     # (B,C,H)
+        y = y + rd[..., None] * jnp.einsum("btn,bhpn->bthp", cb, S)
+        # state: S' = exp(cum_C) S + sum_s exp(cum_C - cum_s) dt_s x_s B_s
+        total = cum[:, -1]                                    # (B,H)
+        xdec = xb * (jnp.exp(total[:, None] - cum) * db)[..., None]
+        S = jnp.exp(total)[..., None, None] * S + jnp.einsum(
+            "bshp,bsn->bhpn", xdec, bb
+        )
+        return S, y
+
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32), (xc, bc, cc, dc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    return y, state
+
+
+def ssd_scan(xh, Bm, Cm, dt, A, state):
+    """xh (B,T,H,P), Bm/Cm (B,T,N), dt (B,T,H), A (H,), state (B,H,P,N) f32.
+    Returns y (B,T,H,P), new_state."""
+    xT = jnp.moveaxis(xh, 1, 0).astype(jnp.float32)
+    BT = jnp.moveaxis(Bm, 1, 0).astype(jnp.float32)
+    CT = jnp.moveaxis(Cm, 1, 0).astype(jnp.float32)
+    dT = jnp.moveaxis(dt, 1, 0).astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, bt, ct, dtt = inp                            # (B,H,P),(B,N),(B,N),(B,H)
+        decay = jnp.exp(Af[None, :] * dtt)               # (B,H)
+        upd = (dtt[..., None, None] * xt[..., :, None]) * bt[:, None, None, :]
+        S = decay[..., None, None] * S + upd             # (B,H,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (xT, BT, CT, dT))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def mamba_apply(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, state: MambaState
+) -> Tuple[jnp.ndarray, MambaState]:
+    """x: (B, T, d) -> (B, T, d). Sequential over T; T=1 is the decode step."""
+    B, T, d = x.shape
+    din, H, d_head, N = mamba_dims(cfg)
+    z = x @ p["w_z"]                                     # (B,T,din)
+    xs = x @ p["w_x"]
+    Bs = x @ p["w_B"]
+    Cs = x @ p["w_C"]
+    dt = x @ p["w_dt"]                                   # (B,T,H)
+
+    xs, new_cx = _causal_conv(xs, p["conv_x"], p["conv_xb"], state.conv_x)
+    Bs, new_cb = _causal_conv(Bs, p["conv_B"], p["conv_Bb"], state.conv_B)
+    Cs, new_cc = _causal_conv(Cs, p["conv_C"], p["conv_Cb"], state.conv_C)
+    xh = xs.reshape(B, T, H, d_head)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+
+    if T > 1 and T % SSD_CHUNK == 0:
+        y, new_ssd = ssd_chunked(xh, Bs, Cs, dt, A, state.ssd)
+    else:
+        y, new_ssd = ssd_scan(xh, Bs, Cs, dt, A, state.ssd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, din)
+
+    # gated RMSNorm (Mamba2): norm(y * silu(z)) * scale
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    g = g * jax.lax.rsqrt(jnp.mean(g * g, axis=-1, keepdims=True) + 1e-6)
+    g = (g * p["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+    return g @ p["out_proj"], MambaState(new_cx, new_cb, new_cc, new_ssd)
+
+
+def mamba_empty_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    din, H, d_head, N = mamba_dims(cfg)
+    return MambaState(
+        conv_x=jnp.zeros((batch, 3, din), dtype),
+        conv_B=jnp.zeros((batch, 3, N), dtype),
+        conv_C=jnp.zeros((batch, 3, N), dtype),
+        ssd=jnp.zeros((batch, H, d_head, N), jnp.float32),
+    )

@@ -1,0 +1,213 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892): attention-free time mix with
+DATA-DEPENDENT per-channel decay + squared-ReLU channel mix.
+
+The WKV recurrence per head (state S in R^{hd_k x hd_v}):
+
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t,   w_t = exp(-exp(w0 + lora(x_t)))
+
+Implemented as a ``lax.scan`` over time (the reference RWKV CUDA kernel is
+also sequential); the TPU adaptation keeps the (hd_k, hd_v) state resident
+across the scan instead of re-reading HBM. Decode carries
+(tm_shift, cm_shift, S) per layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_apply, norm_init
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jnp.ndarray   # (B, d)   last input to time-mix
+    cm_shift: jnp.ndarray   # (B, d)   last input to channel-mix
+    wkv: jnp.ndarray        # (B, H, hd, hd) recurrent state (f32)
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_block_init(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        "ln_tm": norm_init("layernorm", d, dtype),
+        "ln_cm": norm_init("layernorm", d, dtype),
+        # static token-shift lerp coefficients for r,k,v,g and decay input
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "w_r": dense_init(ks[1], d, d, dtype),
+        "w_k": dense_init(ks[2], d, d, dtype),
+        "w_v": dense_init(ks[3], d, d, dtype),
+        "w_g": dense_init(ks[4], d, d, dtype),
+        "w_o": dense_init(ks[5], d, d, dtype),
+        # data-dependent decay: w0 + tanh(x @ A) @ B  (per-channel)
+        "decay_w0": jnp.full((d,), -1.0, dtype),
+        "decay_A": dense_init(ks[6], d, lora, dtype),
+        "decay_B": (dense_init(ks[7], lora, d, dtype) * 0.1),
+        "bonus_u": (jax.random.uniform(ks[8], (H, hd)) * 0.5).astype(dtype),
+        "gn_scale": jnp.ones((H, hd), dtype),   # per-head group norm
+        "gn_bias": jnp.zeros((H, hd), dtype),
+        # channel mix
+        "cm_mu": (jax.random.uniform(ks[9], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "cm_k": dense_init(ks[10], d, cfg.d_ff, dtype),
+        "cm_v": dense_init(ks[11], cfg.d_ff, d, dtype),
+        "cm_r": dense_init(ks[0], d, d, dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, first: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, d) -> previous token (B, T, d); position 0 gets ``first``."""
+    prev = jnp.concatenate([first[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def wkv_scan(r, k, v, logw, u, state):
+    """Sequential WKV (reference / decode path).
+
+    r,k,v,logw: (B, T, H, hd) (logw = log decay <= 0); u: (H, hd);
+    state: (B, H, hd, hd) f32. Returns (y (B,T,H,hd), new_state).
+    """
+    rT = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kT = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vT = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wT = jnp.exp(jnp.moveaxis(logw, 1, 0).astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rT, kT, vT, wT))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+WKV_CHUNK = 32
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = WKV_CHUNK):
+    """Chunk-parallel WKV — the TPU-native formulation (DESIGN.md §3).
+
+    Within a chunk all pairwise decay exponents cum_{t-1} - cum_s (s < t) are
+    <= 0, so the (C, C, hd) decay tensor is numerically safe; across chunks a
+    single (hd_k, hd_v) state is carried. Replaces the T-step sequential scan
+    (which puts 3 collectives and a tiny matmul in every HLO loop iteration)
+    with T/C chunk steps of dense (C,C,hd) einsums that feed the MXU.
+
+    Exactly equals ``wkv_scan`` (tests/test_rwkv_mamba.py).
+    """
+    B, T, H, hd = r.shape
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    nc = T // C
+
+    def resh(x):
+        return jnp.moveaxis(
+            x.reshape(B, nc, C, H, hd).astype(jnp.float32), 1, 0
+        )                                              # (nc, B, C, H, hd)
+
+    rc, kc, vc, lwc = map(resh, (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(S, inp):
+        rb, kb, vb, lw = inp                           # (B, C, H, hd)
+        cum = jnp.cumsum(lw, axis=1)                   # inclusive  (B,C,H,hd)
+        cum_prev = cum - lw                            # exclusive
+        # intra-chunk: W[t,s] = exp(cum_prev[t] - cum[s]) for s < t  (<= 0)
+        expo = cum_prev[:, :, None] - cum[:, None, :, :, :]   # (B,C,C,H,hd)
+        mask = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[None, :, :, None, None]
+        W = jnp.where(mask, jnp.exp(expo), 0.0)
+        scores = jnp.einsum("bthd,bshd,btshd->bths", rb, kb, W)
+        bonus = jnp.einsum("bthd,bthd,hd->bth", rb, kb, uf)
+        y = jnp.einsum("bths,bshd->bthd", scores, vb)
+        y = y + bonus[..., None] * vb
+        # inter-chunk: decayed state read
+        rdec = rb * jnp.exp(cum_prev)                  # (B,C,H,hd)
+        y = y + jnp.einsum("bthk,bhkv->bthv", rdec, S)
+        # state update: S' = exp(cum_C) * S + sum_s exp(cum_C - cum_s) k_s v_s
+        total = cum[:, -1]                             # (B,H,hd)
+        kdec = kb * jnp.exp(total[:, None] - cum)      # (B,C,H,hd), expo <= 0
+        S = jnp.exp(total)[..., None] * S + jnp.einsum("bshk,bshv->bhkv", kdec, vb)
+        return S, y
+
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32), (rc, kc, vc, lwc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, hd)
+    return y, state
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray, shift_in: jnp.ndarray, wkv_state):
+    """x: (B, T, d). Returns (out, new_shift (B,d), new_wkv_state)."""
+    B, T, d = x.shape
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    xx = _shift(x, shift_in)
+    mu = p["mu"]
+    xr = x + (xx - x) * mu[0]
+    xk = x + (xx - x) * mu[1]
+    xv = x + (xx - x) * mu[2]
+    xg = x + (xx - x) * mu[3]
+    xw = x + (xx - x) * mu[4]
+
+    r = (xr @ p["w_r"]).reshape(B, T, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, T, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+
+    # data-dependent decay in (0,1): w = exp(-exp(dd)) — the Finch
+    # contribution; kept in log space (logw = -exp(dd) <= 0) for stability
+    dd = p["decay_w0"] + jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+    logw = -jnp.exp(jnp.minimum(dd.astype(jnp.float32), 10.0)).reshape(B, T, H, hd)
+
+    if T > 1 and T % WKV_CHUNK == 0:
+        y, new_state = wkv_chunked(r, k, v, logw, p["bonus_u"], wkv_state)
+    else:
+        y, new_state = wkv_scan(r, k, v, logw, p["bonus_u"], wkv_state)
+
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    y = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["gn_scale"].astype(jnp.float32) + p["gn_bias"].astype(jnp.float32)
+    y = y.reshape(B, T, d).astype(x.dtype) * g
+    out = y @ p["w_o"]
+    return out, x[:, -1, :], new_state
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jnp.ndarray, shift_in: jnp.ndarray):
+    xx = _shift(x, shift_in)
+    xk = x + (xx - x) * p["cm_mu"][0]
+    xr = x + (xx - x) * p["cm_mu"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"])
+    return out, x[:, -1, :]
+
+
+def rwkv_block_apply(
+    cfg: ModelConfig, p: dict, x: jnp.ndarray, state: RWKVState
+) -> Tuple[jnp.ndarray, RWKVState]:
+    h = norm_apply("layernorm", p["ln_tm"], x)
+    tm_out, tm_shift, wkv = time_mix(cfg, p, h, state.tm_shift, state.wkv)
+    x = x + tm_out
+    h = norm_apply("layernorm", p["ln_cm"], x)
+    cm_out, cm_shift = channel_mix(cfg, p, h, state.cm_shift)
+    x = x + cm_out
+    return x, RWKVState(tm_shift, cm_shift, wkv)
+
+
+def rwkv_empty_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    return RWKVState(
+        tm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        cm_shift=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )

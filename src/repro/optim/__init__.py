@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    OptState,
+    adam_init,
+    init_optimizer,
+    make_optimizer,
+    sgd_init,
+)
+from repro.optim.schedules import constant_lr, cosine_lr, warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adam_init",
+    "init_optimizer",
+    "make_optimizer",
+    "sgd_init",
+    "constant_lr",
+    "cosine_lr",
+    "warmup_cosine",
+]

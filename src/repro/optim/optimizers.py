@@ -1,0 +1,123 @@
+"""Minimal, pytree-generic optimizers (no external deps).
+
+``make_optimizer(train_cfg)`` returns ``(init_fn, update_fn)`` with
+``update_fn(grads, state, params, lr) -> (new_params, new_state)``.
+The paper's nodes run plain SGD (lr 0.002 CNN / 0.3 LSTM); momentum and Adam
+exist for the larger architectures' local training.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment / momentum (pytree or None)
+    nu: Any          # second moment (pytree or None)
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), None, None)
+
+
+def momentum_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+
+def adam_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), _zeros_like_f32(params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def make_optimizer(cfg: TrainConfig) -> Tuple[Callable, Callable]:
+    wd = cfg.weight_decay
+
+    def apply_wd(p, g):
+        if wd:
+            return g + wd * p.astype(jnp.float32)
+        return g
+
+    if cfg.optimizer == "sgd":
+        init = sgd_init
+
+        def update(grads, state, params, lr):
+            if cfg.grad_clip:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32) - lr * apply_wd(p, g.astype(jnp.float32))).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new_params, OptState(state.step + 1, None, None)
+
+        return init, update
+
+    if cfg.optimizer == "momentum":
+        init = momentum_init
+
+        def update(grads, state, params, lr):
+            if cfg.grad_clip:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            mu = jax.tree_util.tree_map(
+                lambda m, g: cfg.momentum * m + g.astype(jnp.float32), state.mu, grads
+            )
+            new_params = jax.tree_util.tree_map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu
+            )
+            return new_params, OptState(state.step + 1, mu, None)
+
+        return init, update
+
+    if cfg.optimizer == "adam":
+        init = adam_init
+        b1, b2, eps = 0.9, 0.95, 1e-8
+
+        def update(grads, state, params, lr):
+            if cfg.grad_clip:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            step = state.step + 1
+            mu = jax.tree_util.tree_map(
+                lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+            )
+            nu = jax.tree_util.tree_map(
+                lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                state.nu,
+                grads,
+            )
+            bc1 = 1 - b1 ** step.astype(jnp.float32)
+            bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+            def upd(p, m, n):
+                d = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+                return (p.astype(jnp.float32) - lr * (d + wd * p.astype(jnp.float32))).astype(p.dtype)
+
+            new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+            return new_params, OptState(step, mu, nu)
+
+        return init, update
+
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")
+
+
+def init_optimizer(cfg: TrainConfig, params) -> OptState:
+    init, _ = make_optimizer(cfg)
+    return init(params)

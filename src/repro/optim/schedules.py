@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(base: float):
+    return lambda step: jnp.asarray(base, jnp.float32)
+
+
+def cosine_lr(base: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(base: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine_lr(base, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = base * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

@@ -1,0 +1,8 @@
+from repro.sharding import fl_step, specs
+from repro.sharding.fl_step import Frontier, init_frontier, make_dagfl_train_step
+from repro.sharding.specs import batch_specs, cache_specs, param_specs
+
+__all__ = [
+    "fl_step", "specs", "Frontier", "init_frontier", "make_dagfl_train_step",
+    "batch_specs", "cache_specs", "param_specs",
+]

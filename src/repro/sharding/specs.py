@@ -1,0 +1,185 @@
+"""Per-arch sharding rules: leaf key-path -> PartitionSpec.
+
+Conventions (DESIGN.md §3):
+  * ``model`` axis — tensor parallel (head/ff/expert dims).
+  * ``data``(+``pod``) axes — FL-node axis for node-stacked params, or the
+    FSDP-ish second weight dim for pod-granularity archs, plus the batch dim
+    of activations.
+  * Every rule degrades to replication when a dim is not divisible by the
+    axis size (e.g. Gemma's single KV head), letting GSPMD choose.
+
+``param_specs(cfg, params, mesh, mode)`` walks the pytree:
+  mode="fl"    — leading node axis on every leaf -> data axes, inner dims
+                 per rules (model axis only).
+  mode="plain" — no node axis; big weights 2-D sharded (data x model).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axsize(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(mesh, axes, dim: int) -> bool:
+    return dim % _axsize(mesh, axes) == 0
+
+
+def _maybe(mesh, axes, dim: int):
+    """axes if divisible else None (replicate)."""
+    return axes if axes and _fits(mesh, axes, dim) else None
+
+
+# ---------------------------------------------------------------------------
+# rules keyed by parameter name
+# ---------------------------------------------------------------------------
+
+# name -> (model_dim_index, transpose_style)
+# "col": shard LAST dim on model; "row": shard FIRST (non-layer) dim on model
+_COL = {
+    "wq", "wk", "wv", "wi", "wg", "w_r", "w_k", "w_v", "w_g", "cm_k", "cm_r",
+    "w_z", "w_x", "w_dt", "decay_B", "wq_a", "wq_b", "wkv_b", "frontend_proj",
+    "lm_head", "fc", "out",
+}
+_ROW = {"wo", "w_o", "cm_v", "out_proj"}
+_VEC_MODEL = {"bq", "conv_xb", "gn_scale", "decay_w0"}
+_REPL = {
+    "router", "wkv_a", "w_B", "w_C", "conv_B", "conv_Bb", "conv_C", "conv_Cb",
+    "decay_A", "scale", "bias", "q_norm", "k_norm", "bk", "bv", "A_log", "D",
+    "dt_bias", "mu", "cm_mu", "bfc", "bout", "b1", "b2",
+}
+_2D_ROWDATA = {"wq", "wk", "wv", "wi", "wg", "wq_a", "wq_b", "wkv_b"}  # (d, out)
+
+
+def leaf_spec(cfg: ModelConfig, path: Tuple[str, ...], leaf, mesh, mode: str) -> P:
+    """Spec for one (unstacked) leaf given its key path."""
+    names = [p for p in path]
+    name = names[-1]
+    shape = leaf.shape
+    dims = len(shape)
+    spec = [None] * dims
+    plain2d = mode == "plain"
+
+    def set_if(idx, axes):
+        if 0 <= idx < dims and axes is not None and _fits(mesh, axes, shape[idx]):
+            spec[idx] = axes
+
+    if name in ("embed",):
+        set_if(0, "model")
+        if plain2d:
+            set_if(1, "data")
+    elif "moe" in names and name in ("wi", "wg", "wo"):
+        set_if(0, "model")                       # expert parallel
+        if plain2d:
+            # (E, d, ff) / (E, ff, d): shard the d dim over data
+            d_idx = 1 if name in ("wi", "wg") else 2
+            set_if(d_idx, "data")
+    elif name in ("conv_x",):
+        set_if(1, "model")
+    elif name in ("bonus_u", "gn_scale", "gn_bias") and dims >= 2:
+        set_if(0, "model")                       # (H, hd)
+    elif name in _COL:
+        set_if(dims - 1, "model")
+        if plain2d and dims >= 2 and name in _2D_ROWDATA:
+            set_if(dims - 2, "data")
+    elif name in _ROW:
+        set_if(dims - 2, "model")
+        if plain2d:
+            set_if(dims - 1, "data")
+    elif name in _VEC_MODEL:
+        set_if(dims - 1, "model")
+    # everything else (incl. _REPL) stays replicated
+    return P(*spec)
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh, mode: str = "plain") -> Any:
+    """PartitionSpec pytree matching ``params`` (no node prefix — callers add
+    a leading FL-node axis with steps._prefix_specs when stacking replicas).
+
+    mode="plain": 2-D weight sharding (data x model, FSDP-ish).
+    mode="model": model-axis rules only (FL replicas: data axis is the node
+                  dimension, so inner dims must not use it).
+    Leaves under "layers" carry a leading stacked-layer dim (never sharded).
+    """
+
+    def visit(path, leaf):
+        names = tuple(
+            k.key if hasattr(k, "key") else str(getattr(k, "idx", k)) for k in path
+        )
+        strip = 1 if "layers" in names else 0
+
+        class _Fake:
+            shape = leaf.shape[strip:]
+
+        base = leaf_spec(cfg, names, _Fake, mesh, mode)
+        prefix = (None,) * strip
+        return P(*(prefix + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def batch_specs(mesh, batch: Any, fl: bool = False) -> Any:
+    """tokens/labels (B, S) or (N, b, S); frontend adds trailing dims."""
+    data_ax = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_ax = data_ax if len(data_ax) > 1 else (data_ax[0] if data_ax else None)
+
+    def visit(leaf):
+        dims = leaf.ndim
+        if leaf.shape[0] % _axsize(mesh, data_ax) == 0:
+            return P(*((data_ax,) + (None,) * (dims - 1)))
+        return P(*((None,) * dims))
+
+    return jax.tree_util.tree_map(visit, batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh, cache: Any) -> Any:
+    """KV caches: batch dim -> data axes; heads (or head_dim / latent) ->
+    model; batch-1 long-context decode shards the SEQUENCE dim over data."""
+    data_ax = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    data_ax = data_ax if len(data_ax) > 1 else (data_ax[0] if data_ax else None)
+    n_data = _axsize(mesh, data_ax)
+    n_model = mesh.shape["model"]
+
+    def visit(path, leaf):
+        shape = leaf.shape
+        dims = len(shape)
+        if dims <= 1:
+            return P(*((None,) * dims))
+        spec = [None] * dims
+        # layout conventions (see models/*): leading stacked-layer dim, then B
+        # attn KVCache k/v: (L, B, S, KV, hd); mla: (L, B, S, r); rwkv wkv:
+        # (L, B, H, hd, hd); mamba ssd: (L, B, H, P, N); conv: (L, B, K-1, C)
+        b_idx = 1 if dims >= 3 else 0
+        if shape[b_idx] % n_data == 0 and shape[b_idx] > 1:
+            spec[b_idx] = data_ax
+        elif dims >= 4 and shape[b_idx + 1] % n_data == 0:
+            spec[b_idx + 1] = data_ax          # batch-1: shard sequence/heads
+        # model axis: try the head-ish dims from the end
+        for idx in range(dims - 2, b_idx, -1):
+            if spec[idx] is None and shape[idx] % n_model == 0 and shape[idx] >= n_model:
+                spec[idx] = "model"
+                break
+        else:
+            if spec[dims - 1] is None and shape[dims - 1] % n_model == 0 and shape[dims - 1] >= n_model:
+                spec[dims - 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def to_shardings(mesh, specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets its own flags in-process);
+# keep any user XLA_FLAGS but never force a device count here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,92 @@
+"""Eq.-(1) aggregation: three implementations agree + algebraic properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import bank as bank_lib
+
+
+def rand_tree(key, k=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape = lambda s: (k,) + s if k else s
+    return {
+        "a": jax.random.normal(k1, shape((17, 5))),
+        "b": {"c": jax.random.normal(k2, shape((3, 4, 2))), "d": jax.random.normal(k3, shape((11,)))},
+    }
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 6))
+def test_pytree_flat_bank_agree(seed, k):
+    key = jax.random.PRNGKey(seed)
+    stacked = rand_tree(key, k)
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (k,)))
+
+    out_tree = agg.fedavg_pytree(stacked, w)
+    out_flat = agg.fedavg_flat(stacked, w)
+    bank = stacked
+    out_bank = bank_lib.bank_average(bank, jnp.arange(k), w)
+
+    for a, b in zip(jax.tree_util.tree_leaves(out_tree), jax.tree_util.tree_leaves(out_flat)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(out_tree), jax.tree_util.tree_leaves(out_bank)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_convex_combination_bounds(seed):
+    """FedAvg output lies within [min, max] of the inputs, element-wise."""
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (4, 50))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (4,)))
+    out = agg.fedavg_pytree(stacked, w)
+    assert bool(jnp.all(out <= jnp.max(stacked, 0) + 1e-6))
+    assert bool(jnp.all(out >= jnp.min(stacked, 0) - 1e-6))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_permutation_invariance(seed):
+    key = jax.random.PRNGKey(seed)
+    stacked = jax.random.normal(key, (5, 31))
+    w = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (5,)))
+    perm = jax.random.permutation(jax.random.fold_in(key, 2), 5)
+    out1 = agg.fedavg_pytree(stacked, w)
+    out2 = agg.fedavg_pytree(stacked[perm], w[perm])
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+def test_identity_when_single_model():
+    x = jnp.arange(12.0).reshape(3, 4)
+    stacked = x[None]
+    out = agg.fedavg_pytree(stacked, jnp.ones((1,)))
+    np.testing.assert_allclose(out, x)
+
+
+def test_bank_average_skips_invalid_and_renormalizes():
+    bank = jnp.stack([jnp.ones((6,)), 3 * jnp.ones((6,)), 100 * jnp.ones((6,))])
+    out = bank_lib.bank_average(bank, jnp.asarray([0, 1, -1]), jnp.full((3,), 1 / 3))
+    np.testing.assert_allclose(out, 2 * jnp.ones((6,)), rtol=1e-6)
+
+
+def test_staleness_accuracy_weights():
+    acc = jnp.asarray([0.9, 0.5, 0.9])
+    stale = jnp.asarray([0.0, 0.0, 19.0])
+    w = agg.staleness_accuracy_weights(acc, stale, tau_max=20.0)
+    np.testing.assert_allclose(jnp.sum(w), 1.0, rtol=1e-6)
+    assert w[0] > w[1]          # higher accuracy wins
+    assert w[0] > w[2]          # fresher wins at equal accuracy
+
+
+def test_auth_checksum_detects_change():
+    key = jax.random.PRNGKey(0)
+    tree = rand_tree(key)
+    t1 = bank_lib.auth_checksum(tree)
+    tree2 = jax.tree_util.tree_map(lambda x: x, tree)
+    tree2["a"] = tree2["a"].at[0, 0].add(0.5)
+    t2 = bank_lib.auth_checksum(tree2)
+    assert abs(float(t1 - t2)) > 1e-6

@@ -1,0 +1,57 @@
+"""Checkpoint round trips for params, DAG state, and optimizer state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_meta, load_pytree, save_pytree
+from repro.configs import ARCHS, TrainConfig
+from repro.core import dag as dag_lib
+from repro.models import build_model
+from repro.optim import init_optimizer
+
+
+def test_params_roundtrip(tmp_path):
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    p = str(tmp_path / "ckpt")
+    save_pytree(p, params, meta={"arch": cfg.name, "step": 7})
+    restored = load_pytree(p, jax.tree_util.tree_map(jnp.zeros_like, params))
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert load_meta(p)["step"] == 7
+
+
+def test_dag_roundtrip(tmp_path):
+    dag = dag_lib.empty_dag(16, 2, 4)
+    dag = dag_lib.publish(
+        dag, jnp.asarray(1), jnp.asarray(2.0),
+        jnp.asarray([-1, -1], jnp.int32), jnp.asarray(0.4),
+        jnp.asarray(1.25), jnp.asarray(0),
+    )
+    p = str(tmp_path / "dag")
+    save_pytree(p, dag)
+    restored = load_pytree(p, dag_lib.empty_dag(16, 2, 4))
+    assert int(restored.count) == 1
+    assert float(restored.accuracy[0]) == float(dag.accuracy[0])
+
+
+def test_structure_mismatch_raises(tmp_path):
+    p = str(tmp_path / "x")
+    save_pytree(p, {"a": jnp.zeros(3)})
+    try:
+        load_pytree(p, {"b": jnp.zeros(3)})
+        assert False, "should have raised"
+    except ValueError:
+        pass
+
+
+def test_opt_state_roundtrip(tmp_path):
+    cfg = ARCHS["olmo-1b"].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_optimizer(TrainConfig(optimizer="adam"), params)
+    p = str(tmp_path / "opt")
+    save_pytree(p, opt)
+    restored = load_pytree(p, jax.tree_util.tree_map(jnp.zeros_like, opt))
+    assert int(restored.step) == int(opt.step)

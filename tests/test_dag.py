@@ -1,0 +1,131 @@
+"""DAG ledger invariants: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dag as dag_lib
+
+CAP, K, N = 64, 2, 8
+
+
+def fresh_dag():
+    return dag_lib.empty_dag(CAP, K, N)
+
+
+def publish_n(dag, n, approvals=None, t0=0.0, dt=1.0):
+    for i in range(n):
+        ap = approvals(i, dag) if approvals else jnp.full((K,), dag_lib.NO_TX, jnp.int32)
+        dag = dag_lib.publish(
+            dag,
+            jnp.asarray(i % N, jnp.int32),
+            jnp.asarray(t0 + i * dt, jnp.float32),
+            ap,
+            jnp.asarray(0.5, jnp.float32),
+            jnp.asarray(0.0, jnp.float32),
+            jnp.asarray(i % CAP, jnp.int32),
+        )
+    return dag
+
+
+def test_publish_appends():
+    dag = publish_n(fresh_dag(), 5)
+    assert int(dag.count) == 5
+    assert int(jnp.sum(dag.publisher >= 0)) == 5
+
+
+def test_tips_are_unapproved_and_fresh():
+    dag = publish_n(fresh_dag(), 5)
+    tips = dag_lib.tip_mask(dag, jnp.float32(4.0), tau_max=10.0)
+    assert int(jnp.sum(tips)) == 5
+    # approve rows 0,1 via a publish
+    dag = dag_lib.publish(
+        dag, jnp.asarray(0), jnp.asarray(5.0), jnp.asarray([0, 1], jnp.int32),
+        jnp.asarray(0.5), jnp.asarray(0.0), jnp.asarray(5),
+    )
+    tips = dag_lib.tip_mask(dag, jnp.float32(5.0), tau_max=10.0)
+    assert not bool(tips[0]) and not bool(tips[1])
+    assert bool(tips[5])          # the new transaction is a tip
+
+
+def test_staleness_threshold_excludes_old():
+    dag = publish_n(fresh_dag(), 5, dt=10.0)   # publish times 0..40
+    tips = dag_lib.tip_mask(dag, jnp.float32(45.0), tau_max=20.0)
+    # only rows with publish_time >= 25 qualify: rows 3 (30) and 4 (40)
+    assert int(jnp.sum(tips)) == 2
+
+
+def test_acyclicity_approvals_point_backwards():
+    def approve_prev(i, dag):
+        if i == 0:
+            return jnp.full((K,), dag_lib.NO_TX, jnp.int32)
+        prev = int(jnp.mod(dag.count - 1, CAP))
+        return jnp.asarray([prev, dag_lib.NO_TX], jnp.int32)
+
+    dag = publish_n(fresh_dag(), 10, approvals=approve_prev)
+    rows = np.arange(10)
+    for r in rows:
+        for a in np.asarray(dag.approvals[r]):
+            if a >= 0:
+                assert a < r      # edges always to older rows
+
+
+def test_contribution_counters():
+    def approve_prev(i, dag):
+        if i == 0:
+            return jnp.full((K,), dag_lib.NO_TX, jnp.int32)
+        prev = int(jnp.mod(dag.count - 1, CAP))
+        return jnp.asarray([prev, dag_lib.NO_TX], jnp.int32)
+
+    dag = publish_n(fresh_dag(), 9, approvals=approve_prev)
+    # every node published; all but the newest got >= 1 approval
+    assert int(jnp.sum(dag.published_per_node)) == 9
+    assert int(jnp.sum(dag.contributing_m0)) == 8
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_pub=st.integers(1, 40),
+    alpha=st.integers(1, 8),
+    tau=st.floats(1.0, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_select_tips_valid_and_unique(n_pub, alpha, tau, seed):
+    dag = publish_n(fresh_dag(), n_pub)
+    now = jnp.float32(n_pub)
+    idx, nvalid = dag_lib.select_tips(dag, jax.random.PRNGKey(seed), alpha, now, tau)
+    idx = np.asarray(idx)
+    valid = idx[idx >= 0]
+    # unique, actually tips, count consistent
+    assert len(set(valid.tolist())) == len(valid)
+    assert int(nvalid) == len(valid)
+    mask = np.asarray(dag_lib.tip_mask(dag, now, tau))
+    for v in valid:
+        assert mask[v]
+    assert len(valid) == min(alpha, mask.sum())
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bonus=st.floats(2.0, 8.0))
+def test_select_tips_bias_prefers_biased_nodes(seed, bonus):
+    dag = publish_n(fresh_dag(), 32)
+    now = jnp.float32(40.0)
+    node_bias = jnp.zeros((N + 1,)).at[0].set(bonus)   # favor node 0
+    counts = 0
+    trials = 20
+    for t in range(trials):
+        idx, _ = dag_lib.select_tips(
+            dag, jax.random.PRNGKey(seed + t), 4, now, 100.0, node_bias=node_bias
+        )
+        pubs = np.asarray(dag.publisher)[np.asarray(idx)[np.asarray(idx) >= 0]]
+        counts += (pubs == 0).sum()
+    # node 0 published 4/32 rows; with bias it should be picked far above 4/32
+    assert counts / (trials * 4) > 4 / 32
+
+
+def test_merge_prefers_longer_history():
+    a = publish_n(fresh_dag(), 3)
+    b = publish_n(fresh_dag(), 6)
+    m = dag_lib.merge(a, b)
+    assert int(m.count) == 6

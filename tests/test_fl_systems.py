@@ -1,0 +1,50 @@
+"""Integration: the four FL systems run and produce sane results (small scale)."""
+import numpy as np
+import pytest
+
+from repro.fl.experiments import default_dagfl_config, make_cnn_setup, make_lstm_setup
+from repro.fl.systems import SimConfig, run_async, run_block, run_dagfl, run_google
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    task, nodes, gval, gen = make_cnn_setup(num_nodes=16, seed=0)
+    dcfg = default_dagfl_config(num_nodes=16)
+    sim = SimConfig(iterations=60, eval_every=20, seed=0)
+    return task, nodes, gval, dcfg, sim
+
+
+@pytest.mark.parametrize("runner", [run_dagfl, run_async, run_block, run_google])
+def test_system_runs_and_improves_or_stays_finite(cnn_setup, runner):
+    task, nodes, gval, dcfg, sim = cnn_setup
+    res = runner(task, nodes, dcfg, sim, gval)
+    assert len(res.accs) >= 2
+    assert np.all(np.isfinite(res.accs))
+    assert res.avg_latency > 0
+    assert res.times[-1] > 0
+
+
+def test_latency_ordering_matches_table2(cnn_setup):
+    """Google's synchronous rounds are the slowest per iteration (Table II)."""
+    task, nodes, gval, dcfg, sim = cnn_setup
+    dag = run_dagfl(task, nodes, dcfg, sim, gval)
+    goo = run_google(task, nodes, dcfg, sim, gval)
+    asy = run_async(task, nodes, dcfg, sim, gval)
+    assert goo.avg_latency > dag.avg_latency
+    assert goo.avg_latency > asy.avg_latency
+
+
+def test_dagfl_contribution_extras(cnn_setup):
+    task, nodes, gval, dcfg, sim = cnn_setup
+    res = run_dagfl(task, nodes, dcfg, sim, gval)
+    assert "contribution_m0" in res.extras
+    assert len(res.extras["behaviors"]) == len(nodes)
+
+
+def test_lstm_task_systems_run():
+    task, nodes, gval, corpus = make_lstm_setup(num_nodes=10, seed=0)
+    dcfg = default_dagfl_config(num_nodes=10, task="lstm")
+    sim = SimConfig(iterations=20, eval_every=10, seed=0, minibatch=8,
+                    steps_per_iter=2, val_size=8)
+    res = run_dagfl(task, nodes, dcfg, sim, gval)
+    assert np.all(np.isfinite(res.accs))

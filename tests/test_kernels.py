@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("k", [2, 5, 8])
+@pytest.mark.parametrize("n", [1000, 16384, 50000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedavg_sweep(k, n, dtype):
+    key = jax.random.PRNGKey(k * 100 + n % 97)
+    w = jax.nn.softmax(jax.random.normal(key, (k,)))
+    m = jax.random.normal(jax.random.fold_in(key, 1), (k, n)).astype(dtype)
+    out = ops.fedavg(w, m, block_n=8192)
+    expect = ref.fedavg_ref(w, m)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("k", [2, 6])
+@pytest.mark.parametrize("n", [4096, 40000])
+def test_model_distance_sweep(k, n):
+    key = jax.random.PRNGKey(k + n)
+    m = jax.random.normal(key, (k, n))
+    out = ops.model_distance(m, block_n=8192)
+    expect = ref.model_distance_ref(m)
+    scale = float(jnp.mean(jnp.abs(expect))) + 1.0
+    np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-5 * scale * n ** 0.5)
+    # symmetry + nonnegativity (up to fp noise)
+    np.testing.assert_allclose(out, out.T, rtol=1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("S,hd,H,KV", [(128, 64, 4, 4), (256, 64, 8, 2), (192, 128, 4, 1)])
+@pytest.mark.parametrize("window", [0, 96])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, hd, H, KV, window, dtype):
+    key = jax.random.PRNGKey(S + H + window)
+    B = 2
+    q = (jax.random.normal(key, (B, H, S, hd)) * 0.3).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, hd)) * 0.3).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, hd)).astype(dtype)
+    out = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    expect = ref.mqa_attention_ref(q, k, v, window=window)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+@pytest.mark.parametrize("S,H,KV,hd", [(256, 4, 4, 64), (512, 8, 2, 64), (384, 4, 1, 128)])
+def test_decode_attention_sweep(S, H, KV, hd):
+    key = jax.random.PRNGKey(S + H)
+    B = 3
+    q = jax.random.normal(key, (B, H, hd)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    lens = jnp.asarray([S // 3, S, 1], jnp.int32)
+    out = ops.decode_attention(q, k, v, lens, block_s=128)
+    expect = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_matches_model_sdpa():
+    """The Pallas kernel and the model's chunked jnp path agree."""
+    from repro.models.attention import chunked_sdpa
+
+    key = jax.random.PRNGKey(7)
+    B, S, H, KV, hd = 2, 256, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    jnp_out = chunked_sdpa(q, k, v, block_q=64)
+    # kernel layout (B,H,S,hd)
+    pall = ops.flash_attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+        block_q=64, block_k=64,
+    )
+    np.testing.assert_allclose(
+        jnp.moveaxis(pall, 1, 2), jnp_out, rtol=2e-3, atol=2e-3
+    )
