@@ -18,6 +18,7 @@ from benchmarks import (
     ablation_weighted,
     fig5_ideal_convergence,
     fig6_11_abnormal_nodes,
+    gossip_propagation,
     kernel_bench,
     roofline_table,
     stability_tips,
@@ -60,6 +61,7 @@ def main() -> None:
             fig6_11_abnormal_nodes.run_four_systems("cnn", "backdoor", 20, iters_mid),
             fig6_11_abnormal_nodes.run_four_systems("lstm", "poisoning", 20, iters_lstm),
         )),
+        ("gossip", lambda: gossip_propagation.run(iters_mid)),
         ("table3", lambda: table3_attack_success.run(iters_mid)),
         ("table4", lambda: table4_contribution_rates.run("cnn", iters_mid, counts=counts)),
         ("ablation", lambda: ablation_weighted.run(150 if args.quick else 200)),

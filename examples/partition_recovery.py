@@ -1,0 +1,76 @@
+"""Partition/heal walkthrough: §III.A's per-node DAGs under a network split.
+
+    PYTHONPATH=src python examples/partition_recovery.py [--nodes 12]
+
+Each node runs Algorithm 2 against its OWN DAG replica on a ring overlay
+(repro.net). Mid-run the overlay is partitioned into two halves: the sides
+keep training against divergent ledgers (row visibility splits, duplicate
+approvals accumulate across the two stale views), then the schedule heals
+and anti-entropy gossip pulls every replica back to the union view.
+"""
+import argparse
+
+import numpy as np
+
+from repro.fl.experiments import default_dagfl_config, make_cnn_setup
+from repro.fl.systems import SimConfig, run_dagfl, run_dagfl_gossip
+from repro.net import topology as topo
+from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
+from repro.net.replica import read_replica, replicas_synced
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=12)
+    ap.add_argument("--iterations", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n = args.nodes
+
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=args.iterations, eval_every=15, seed=args.seed)
+    t_split, t_heal = args.iterations / 3.0, 2.0 * args.iterations / 3.0
+
+    # --- ideal shared-ledger baseline -------------------------------------
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=args.seed)
+    base = run_dagfl(task, nodes, dcfg, sim, gval)
+    print(f"shared-ledger baseline: final acc {base.accs[-1]:.3f}")
+
+    # --- ring overlay with a mid-run partition ----------------------------
+    schedule = PartitionSchedule(
+        assignment=topo.split_halves(n), t_start=t_split, t_end=t_heal
+    )
+    print(f"partitioning halves for t in [{t_split:.0f}, {t_heal:.0f}) ...")
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=args.seed)
+    res = run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.ring(n),
+        gossip=GossipConfig(sync_period=1.0, seed=args.seed),
+        partition=schedule,
+    )
+
+    print("\n  iter    time   target_acc   max_missing_rows")
+    for (it, t, miss), acc in zip(res.extras["divergence_curve"], res.accs):
+        phase = "SPLIT" if t_split <= t < t_heal else "     "
+        print(f"  {int(it):4d}  {t:6.1f}s      {acc:.3f}    {int(miss):4d}  {phase}")
+
+    dup = res.extras["approvals_issued"] - res.extras["approvals_in_union"]
+    print(f"\nfinal acc {res.accs[-1]:.3f} (baseline {base.accs[-1]:.3f}); "
+          f"sync rounds {res.extras['sync_rounds']}; "
+          f"duplicate approvals collapsed by union-max: {dup}")
+
+    # --- heal to fixpoint: all replicas become the identical DagState -----
+    rs = res.extras["replicas"]
+    net = GossipNetwork(
+        read_replica(rs, 0), rs.bank, topo.ring(n), GossipConfig(sync_period=1.0)
+    )
+    net.replicas = rs
+    before = net.missing_rows()
+    net.converge(at_time=float("inf"))
+    print(f"post-run anti-entropy flush: missing rows {before.tolist()} -> "
+          f"{net.missing_rows().tolist()}; "
+          f"replicas identical: {bool(replicas_synced(net.replicas.dags))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,11 +2,11 @@
 from repro.core import aggregation, anomaly, bank, consensus, controller, dag, stability, validation
 from repro.core.consensus import IterationOut, make_dagfl_iteration
 from repro.core.controller import Controller, ControllerState
-from repro.core.dag import DagState, empty_dag, publish, select_tips, tip_mask
+from repro.core.dag import DagState, empty_dag, merge, publish, publish_at, select_tips, tip_mask
 
 __all__ = [
     "aggregation", "anomaly", "bank", "consensus", "controller", "dag",
     "stability", "validation",
     "IterationOut", "make_dagfl_iteration", "Controller", "ControllerState",
-    "DagState", "empty_dag", "publish", "select_tips", "tip_mask",
+    "DagState", "empty_dag", "merge", "publish", "publish_at", "select_tips", "tip_mask",
 ]

@@ -160,19 +160,37 @@ def make_dagfl_stages(
         new_acc = eval_fn(new_params, val_batch).astype(jnp.float32)
         return Prepared(new_params, chosen_rows, new_acc, nvalid)
 
-    def commit(dag, bank, node_id, t_publish, prepared: Prepared):
-        tag = bank_lib.auth_checksum(prepared.new_params)
-        slot = jnp.mod(dag.count, dag_lib.capacity_of(dag))
-        bank = bank_lib.bank_write(bank, slot, prepared.new_params)
-        dag = dag_lib.publish(
-            dag,
-            jnp.asarray(node_id, jnp.int32),
-            jnp.asarray(t_publish, jnp.float32),
-            prepared.chosen_rows,
-            prepared.new_accuracy,
-            tag,
-            slot,
-        )
-        return dag, bank
+    return prepare, commit_prepared
 
-    return prepare, commit
+
+def commit_prepared(dag, bank, node_id, t_publish, prepared: Prepared,
+                    slot=None, new_count=None):
+    """Stage-4 publication of a ``Prepared`` iteration — the single commit
+    body shared by every runtime.
+
+    Default (``slot=None``): append at the ledger-local row
+    ``count % capacity`` (the shared-ledger runtime). Gossip replicas
+    (``repro.net``) instead pass a slot and count watermark derived from the
+    global publish sequence, so the same transaction lands in the same slot
+    on every replica.
+    """
+    if slot is None:
+        slot = jnp.mod(dag.count, dag_lib.capacity_of(dag))
+        new_count = dag.count + 1
+    elif new_count is None:
+        raise ValueError("commit_prepared: slot and new_count go together "
+                         "(see repro.net.replica.global_row)")
+    tag = bank_lib.auth_checksum(prepared.new_params)
+    bank = bank_lib.bank_write(bank, slot, prepared.new_params)
+    dag = dag_lib.publish_at(
+        dag,
+        slot,
+        new_count,
+        jnp.asarray(node_id, jnp.int32),
+        jnp.asarray(t_publish, jnp.float32),
+        prepared.chosen_rows,
+        prepared.new_accuracy,
+        tag,
+        slot,
+    )
+    return dag, bank

@@ -55,8 +55,10 @@ def capacity_of(dag: DagState) -> int:
     return dag.publisher.shape[0]
 
 
-def publish(
+def publish_at(
     dag: DagState,
+    row: jnp.ndarray,            # () int32 slot to write
+    new_count: jnp.ndarray,      # () int32 ledger watermark after the write
     publisher: jnp.ndarray,      # () int32
     time: jnp.ndarray,           # () f32
     approvals: jnp.ndarray,      # (k,) int32, NO_TX padded
@@ -64,10 +66,13 @@ def publish(
     auth_tag: jnp.ndarray,       # () f32
     model_slot: jnp.ndarray,     # () int32
 ) -> DagState:
-    """Append a transaction (Algorithm 2 stage 4) and credit approvals."""
-    cap = capacity_of(dag)
-    row = jnp.mod(dag.count, cap)
+    """Write a transaction into an explicit row and credit its approvals.
 
+    ``publish`` is the single-ledger special case (row = count % cap).
+    Gossip replicas (``repro.net``) allocate rows from a *global* sequence
+    number instead, so the same transaction lands in the same slot on every
+    replica and ``merge`` can reconcile row-wise by identity.
+    """
     # credit each approved transaction; track threshold crossings
     def credit(carry, tx):
         ac, c0, c1 = carry
@@ -95,10 +100,27 @@ def publish(
         accuracy=dag.accuracy.at[row].set(accuracy.astype(jnp.float32)),
         auth_tag=dag.auth_tag.at[row].set(auth_tag.astype(jnp.float32)),
         model_slot=dag.model_slot.at[row].set(model_slot.astype(jnp.int32)),
-        count=dag.count + 1,
+        count=jnp.asarray(new_count, jnp.int32),
         published_per_node=dag.published_per_node.at[publisher].add(1),
         contributing_m0=c0,
         contributing_m1=c1,
+    )
+
+
+def publish(
+    dag: DagState,
+    publisher: jnp.ndarray,      # () int32
+    time: jnp.ndarray,           # () f32
+    approvals: jnp.ndarray,      # (k,) int32, NO_TX padded
+    accuracy: jnp.ndarray,       # () f32
+    auth_tag: jnp.ndarray,       # () f32
+    model_slot: jnp.ndarray,     # () int32
+) -> DagState:
+    """Append a transaction (Algorithm 2 stage 4) and credit approvals."""
+    cap = capacity_of(dag)
+    return publish_at(
+        dag, jnp.mod(dag.count, cap), dag.count + 1,
+        publisher, time, approvals, accuracy, auth_tag, model_slot,
     )
 
 
@@ -146,23 +168,66 @@ def isolated_mask(dag: DagState, m: int) -> jnp.ndarray:
 
 
 def merge(local: DagState, remote: DagState) -> DagState:
-    """Gossip reconciliation: adopt the longer history (row-wise max merge).
+    """Anti-entropy reconciliation of two replicas of the same logical ledger
+    (§III.A: each node's local DAG is "updated by communicating with adjacent
+    nodes").
 
-    Both replicas share the append order (publish is serialized through the
-    global ledger in the runtime), so the element-wise maximum of counters
-    plus preferring rows from the longer chain reproduces §III.A's
-    "local DAG updated by communicating with adjacent nodes".
+    Row-wise, keyed by the ``(publish_time, publisher)`` identity of the
+    transaction stored in each slot:
+
+    * a slot occupied on only one side adopts that side's row;
+    * two *different* transactions in the same slot (divergent histories, or
+      ring wrap-around on one side) resolve to the LATER one — ring semantics
+      already make the later transaction the overwriting one — with the
+      publisher id breaking exact publish-time ties, so the merge is
+      deterministic, commutative, and associative (gossip order cannot
+      matter);
+    * the *same* transaction on both sides keeps the element-wise MAXIMUM
+      approval count: each replica may have credited a disjoint subset of
+      approvers, and max is the monotone (CRDT-style) bound that never
+      un-approves. Concurrent approvals of one row on two replicas therefore
+      collapse (union-by-max, not sum) — ``repro.net`` exposes this as the
+      measurable duplicate-approval deficit of a gossiped deployment.
+
+    ``count`` and the per-node contribution counters are monotone watermarks
+    and merge by element-wise max, so they never decrease.
     """
-    take_remote = remote.count > local.count
+    l_occ = local.publisher >= 0
+    r_occ = remote.publisher >= 0
+    same_tx = (
+        l_occ & r_occ
+        & (local.publish_time == remote.publish_time)
+        & (local.publisher == remote.publisher)
+    )
+    remote_newer = (remote.publish_time > local.publish_time) | (
+        (remote.publish_time == local.publish_time)
+        & (remote.publisher > local.publisher)
+    )
+    take_remote = (r_occ & ~l_occ) | (r_occ & l_occ & ~same_tx & remote_newer)
 
     def pick(a, b):
-        return jnp.where(take_remote, b, a)
+        sel = take_remote.reshape(take_remote.shape + (1,) * (a.ndim - 1))
+        return jnp.where(sel, b, a)
 
-    picked = jax.tree_util.tree_map(pick, local, remote)
-    # approval counts / contribution counters advance monotonically: take max
-    return picked._replace(
-        approval_count=jnp.maximum(local.approval_count, remote.approval_count)
-        * (picked.publisher >= 0),
+    approval_count = jnp.where(
+        take_remote, remote.approval_count, local.approval_count
+    )
+    approval_count = jnp.where(
+        same_tx, jnp.maximum(local.approval_count, remote.approval_count),
+        approval_count,
+    )
+    return DagState(
+        publisher=pick(local.publisher, remote.publisher),
+        publish_time=pick(local.publish_time, remote.publish_time),
+        approvals=pick(local.approvals, remote.approvals),
+        approval_count=approval_count,
+        accuracy=pick(local.accuracy, remote.accuracy),
+        auth_tag=pick(local.auth_tag, remote.auth_tag),
+        model_slot=pick(local.model_slot, remote.model_slot),
+        count=jnp.maximum(local.count, remote.count),
+        published_per_node=jnp.maximum(
+            local.published_per_node, remote.published_per_node
+        ),
         contributing_m0=jnp.maximum(local.contributing_m0, remote.contributing_m0),
         contributing_m1=jnp.maximum(local.contributing_m1, remote.contributing_m1),
     )

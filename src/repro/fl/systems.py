@@ -1,6 +1,10 @@
-"""The four FL systems of Section V, sharing one task/population/latency model.
+"""The FL systems of Section V, sharing one task/population/latency model.
 
 * DAG-FL          — the paper's system (core consensus on a shared ledger).
+* DAG-FL gossip   — same consensus, but each node works against its own DAG
+                    replica synced by anti-entropy gossip over an overlay
+                    (repro.net); the §III.A architecture under an imperfect
+                    network. With an ideal wire it recovers plain DAG-FL.
 * Google FL       — synchronous rounds of 10, FederatedAveraging [1].
 * Asynchronous FL — server mixes each upload into the global model [7].
 * Block FL        — 5 miner groups, candidate blocks (5 tx or 10 s), PoW [3].
@@ -22,11 +26,14 @@ import numpy as np
 
 from repro.configs.base import DagFLConfig
 from repro.core import Controller, make_dagfl_iteration
-from repro.core.consensus import make_dagfl_stages
+from repro.core.consensus import commit_prepared, make_dagfl_stages
 from repro.core.anomaly import contribution_rates
 from repro.fl.latency import LatencyModel
 from repro.fl.nodes import SimNode
 from repro.fl.tasks import make_epoch_train
+from repro.net import gossip as gossip_lib
+from repro.net import replica as replica_lib
+from repro.net import topology as topo_lib
 
 
 @dataclass
@@ -69,19 +76,76 @@ def _jb(batch: Dict[str, np.ndarray]) -> Dict[str, jnp.ndarray]:
     return {k: jnp.asarray(v) for k, v in batch.items()}
 
 
+def _counter_snapshot(dag) -> Dict[str, np.ndarray]:
+    """Raw cumulative counters (Table IV) at a point in time."""
+    return dict(
+        contribution_m0=np.asarray(dag.contributing_m0),
+        contribution_m1=np.asarray(dag.contributing_m1),
+        published=np.asarray(dag.published_per_node),
+    )
+
+
+def _late_contributions(dag, mid_snapshot: Dict, extras: Dict) -> None:
+    """Second-half contribution rates from a mid-run counter snapshot.
+
+    The paper's Table IV runs 10000 s; at bench scale the first half is
+    pre-convergence fog where validation cannot yet separate abnormal models.
+    """
+    if not mid_snapshot:
+        return
+    pub_late = np.asarray(dag.published_per_node) - mid_snapshot["published"]
+    for m in (0, 1):
+        c_late = (
+            np.asarray(getattr(dag, f"contributing_m{m}"))
+            - mid_snapshot[f"contribution_m{m}"]
+        )
+        extras[f"late_contribution_m{m}"] = c_late / np.maximum(pub_late, 1)
+    extras["late_published"] = pub_late
+
+
 # ---------------------------------------------------------------------------
-# DAG-FL
+# DAG-FL: one event-driven Algorithm-2 loop, two ledger backends
 # ---------------------------------------------------------------------------
 
 
-def run_dagfl(
-    task,
-    nodes: List[SimNode],
-    dcfg: DagFLConfig,
-    sim: SimConfig,
-    global_val: Dict[str, np.ndarray],
-    weighted: bool = False,
-) -> SimResult:
+class _SharedLedger:
+    """One instantly-consistent global DAG — the paper's idealized runtime."""
+
+    name = "dagfl"
+
+    def __init__(self, state, commit_fn):
+        self.dag, self.bank = state.dag, state.bank
+        self._commit = jax.jit(commit_fn)
+
+    def view(self, node_id):
+        return self.dag
+
+    def advance(self, t):
+        pass
+
+    def commit(self, node_id, t1, prepared):
+        self.dag, self.bank = self._commit(
+            self.dag, self.bank, node_id, jnp.float32(t1), prepared
+        )
+
+    def union_dag(self):
+        return self.dag
+
+    def observe(self, done, t1, union):
+        pass
+
+    def extras(self, union):
+        return {}
+
+
+def _run_dagfl_events(task, nodes, dcfg, sim, global_val, weighted, make_backend):
+    """Event-driven driver shared by ``run_dagfl`` and ``run_dagfl_gossip``:
+    prepare (stages 1-3) at start time t0, commit (stage 4) at completion
+    t1 = t0 + h — in-flight iterations overlap, so tips accumulate to the
+    Eq.-4 equilibrium instead of being consumed serially. The backend
+    decides what ledger state a node sees (global vs its own replica);
+    keeping one copy of the loop is what guarantees the gossip system's
+    ideal-wire limit stays exactly equivalent to the shared ledger."""
     rng = np.random.default_rng(sim.seed)
     lat = LatencyModel.create(dcfg, sim.seed)
     gv = _jb(global_val)
@@ -90,53 +154,56 @@ def run_dagfl(
     ctrl = Controller(dcfg, task.eval_fn)
     params0 = task.init(jax.random.PRNGKey(sim.seed))
     state = ctrl.genesis(params0, gv)
-    dag, bank = state.dag, state.bank
 
     identity_train = lambda p, b, k: (p, {})
     epoch_train = make_epoch_train(task)
-    prep_normal, commit = make_dagfl_stages(dcfg, task.eval_fn, epoch_train, weighted)
+    prep_normal, commit_fn = make_dagfl_stages(dcfg, task.eval_fn, epoch_train, weighted)
     prep_lazy, _ = make_dagfl_stages(dcfg, task.eval_fn, identity_train, weighted)
     prep_normal, prep_lazy = jax.jit(prep_normal), jax.jit(prep_lazy)
-    commit = jax.jit(commit)
+    backend = make_backend(state, commit_fn)
 
     # joint backdoor attack: backdoor nodes up-weight backdoor publishers
     is_bd = np.array([n.behavior == "backdoor" for n in nodes] + [False])
     bd_bias = jnp.asarray(np.where(is_bd, sim.backdoor_joint_bias, 0.0), jnp.float32)
     zero_bias = jnp.zeros_like(bd_bias)
 
-    # event-driven: prepare (stages 1-3) at start time t0, commit (stage 4)
-    # at completion t1 = t0 + h — in-flight iterations overlap, so tips
-    # accumulate to the Eq.-4 equilibrium instead of being consumed serially.
     starts = _poisson_starts(rng, dcfg.arrival_rate, sim.iterations)
     pending = []        # heap of (t1, seq, node_id, Prepared)
     curve, lats = [], []
     done = 0
     mid_snapshot = {}
-    def _maybe_snapshot():
+
+    def _commit_one(t1, nid, prepared):
+        nonlocal done
+        backend.advance(t1)
+        backend.commit(nid, t1, prepared)
+        done += 1
         if done == sim.iterations // 2 and not mid_snapshot:
-            mid_snapshot.update(
-                contribution_m0=np.asarray(contribution_rates(dag, 0)) * 0 + np.asarray(dag.contributing_m0),
-                contribution_m1=np.asarray(dag.contributing_m1),
-                published=np.asarray(dag.published_per_node),
-            )
+            mid_snapshot.update(_counter_snapshot(backend.union_dag()))
+
+    def _check(t1):
+        nonlocal state
+        union = backend.union_dag()
+        state.dag, state.bank = union, backend.bank
+        state = ctrl.check(state, jax.random.PRNGKey(done), float(t1) + 1e-3, gv)
+        curve.append((done, t1, state.best_accuracy))
+        backend.observe(done, t1, union)
+
     for i, t0 in enumerate(starts):
         while pending and pending[0][0] <= t0:
             t1, _, nid, prepared = heapq.heappop(pending)
-            dag, bank = commit(dag, bank, nid, jnp.float32(t1), prepared)
-            done += 1
-            _maybe_snapshot()
+            _commit_one(t1, nid, prepared)
             if done % sim.eval_every == 0:
-                state.dag, state.bank = dag, bank
-                state = ctrl.check(state, jax.random.PRNGKey(done), float(t1) + 1e-3, gv)
-                curve.append((done, t1, state.best_accuracy))
+                _check(t1)
+        backend.advance(t0)
         node = nodes[rng.integers(0, N)]
         lazy = node.behavior == "lazy"
         t1 = t0 + lat.dagfl_iteration(node.node_id, lazy=lazy)
         fn = prep_lazy if lazy else prep_normal
         bias = bd_bias if node.behavior == "backdoor" else zero_bias
         prepared = fn(
-            dag,
-            bank,
+            backend.view(node.node_id),
+            backend.bank,
             jnp.float32(t0),
             jax.random.PRNGKey(sim.seed * 100003 + i),
             _jb(node.epoch(sim.steps_per_iter, sim.minibatch)),
@@ -147,37 +214,147 @@ def run_dagfl(
         lats.append(t1 - t0)
     while pending:
         t1, _, nid, prepared = heapq.heappop(pending)
-        dag, bank = commit(dag, bank, nid, jnp.float32(t1), prepared)
-        done += 1
-        _maybe_snapshot()
-    state.dag, state.bank = dag, bank
-    state = ctrl.check(state, jax.random.PRNGKey(done), float(t1) + 1e-3, gv)
-    curve.append((done, t1, state.best_accuracy))
+        _commit_one(t1, nid, prepared)
+    _check(t1)
 
-    state.dag, state.bank = dag, bank
+    union = state.dag
     extras = {
-        "contribution_m0": np.asarray(contribution_rates(dag, 0)),
-        "contribution_m1": np.asarray(contribution_rates(dag, 1)),
-        "published": np.asarray(dag.published_per_node),
+        "contribution_m0": np.asarray(contribution_rates(union, 0)),
+        "contribution_m1": np.asarray(contribution_rates(union, 1)),
+        "published": np.asarray(union.published_per_node),
         "behaviors": [n.behavior for n in nodes],
-        "dag": dag,
+        "dag": union,
     }
-    # late-phase (second half) contribution rates: the paper's Table IV runs
-    # 10000 s; at bench scale the first half is pre-convergence fog where
-    # validation cannot yet separate abnormal models.
-    if mid_snapshot:
-        pub_late = np.asarray(dag.published_per_node) - mid_snapshot["published"]
-        for m in (0, 1):
-            c_late = (
-                np.asarray(getattr(dag, f"contributing_m{m}"))
-                - mid_snapshot[f"contribution_m{m}"]
-            )
-            extras[f"late_contribution_m{m}"] = c_late / np.maximum(pub_late, 1)
-        extras["late_published"] = pub_late
+    extras.update(backend.extras(union))
+    _late_contributions(union, mid_snapshot, extras)
     it_arr, t_arr, a_arr = map(np.asarray, zip(*curve))
     return SimResult(
-        "dagfl", it_arr, t_arr, a_arr, float(np.mean(lats)), state.target_model
-        if state.target_model is not None else params0, extras
+        backend.name, it_arr, t_arr, a_arr, float(np.mean(lats)),
+        state.target_model if state.target_model is not None else params0, extras,
+    )
+
+
+def run_dagfl(
+    task,
+    nodes: List[SimNode],
+    dcfg: DagFLConfig,
+    sim: SimConfig,
+    global_val: Dict[str, np.ndarray],
+    weighted: bool = False,
+) -> SimResult:
+    return _run_dagfl_events(
+        task, nodes, dcfg, sim, global_val, weighted,
+        lambda state, commit_fn: _SharedLedger(state, commit_fn),
+    )
+
+
+# ---------------------------------------------------------------------------
+# DAG-FL over a gossip overlay (repro.net)
+# ---------------------------------------------------------------------------
+
+
+def _gossip_commit(dag, bank, node_id, t_publish, prepared, seq):
+    """Stage-4 commit against a node's LOCAL replica, at a global row.
+
+    The same ``commit_prepared`` body as the shared ledger, addressed by
+    ``replica.global_row`` instead of the replica-local count, so every
+    replica stores this transaction at the same slot and ``dag.merge`` can
+    reconcile by identity.
+    """
+    slot, new_count = replica_lib.global_row(dag, seq)
+    return commit_prepared(
+        dag, bank, node_id, t_publish, prepared, slot=slot, new_count=new_count
+    )
+
+
+class _GossipLedger:
+    """Per-node replicas over a gossip overlay (repro.net)."""
+
+    name = "dagfl_gossip"
+
+    def __init__(self, state, topology, gossip, partition):
+        self.net = gossip_lib.GossipNetwork(
+            state.dag, state.bank, topology, gossip, partition
+        )
+        self.seq = int(state.dag.count)       # genesis consumed sequence 0
+        self._commit = jax.jit(_gossip_commit)
+        self.approvals_issued = 0
+        self.divergence = []
+
+    @property
+    def bank(self):
+        return self.net.bank
+
+    def view(self, node_id):
+        return self.net.read(node_id)
+
+    def advance(self, t):
+        self.net.advance(t)
+
+    def commit(self, node_id, t1, prepared):
+        dag_i = self.net.read(node_id)
+        dag_i, bank = self._commit(
+            dag_i, self.net.bank, node_id, jnp.float32(t1), prepared,
+            jnp.int32(self.seq),
+        )
+        self.net.write(node_id, dag_i, bank)
+        self.seq += 1
+        self.approvals_issued += int(np.sum(np.asarray(prepared.chosen_rows) >= 0))
+
+    def union_dag(self):
+        return self.net.union()
+
+    def observe(self, done, t1, union):
+        self.divergence.append(
+            (done, float(t1), int(self.net.missing_rows(union).max()))
+        )
+
+    def extras(self, union):
+        return {
+            "replicas": self.net.replicas,
+            "sync_rounds": self.net.rounds_run,
+            "synced_final": self.net.synced(),
+            "missing_rows_final": self.net.missing_rows(union),
+            # duplicate-approval deficit: credits issued by committers vs
+            # what survives the union's max-merge (a lower bound after ring
+            # eviction)
+            "approvals_issued": self.approvals_issued,
+            "approvals_in_union": int(
+                np.asarray(jnp.sum(union.approval_count * (union.publisher >= 0)))
+            ),
+            "divergence_curve": np.asarray(self.divergence, dtype=np.float64),
+        }
+
+
+def run_dagfl_gossip(
+    task,
+    nodes: List[SimNode],
+    dcfg: DagFLConfig,
+    sim: SimConfig,
+    global_val: Dict[str, np.ndarray],
+    weighted: bool = False,
+    topology: Optional[topo_lib.Topology] = None,
+    gossip: Optional[gossip_lib.GossipConfig] = None,
+    partition: Optional[gossip_lib.PartitionSchedule] = None,
+) -> SimResult:
+    """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
+
+    ``prepare`` (stages 1-3) reads the node's LOCAL view at iteration start;
+    ``commit`` (stage 4) publishes locally; anti-entropy sync ticks are
+    interleaved into the event timeline (``GossipNetwork.advance``). The
+    external agent E evaluates the union of all replicas — with an ideal
+    wire (``sync_period <= 0``, drop 0, connected overlay) this reduces
+    exactly to ``run_dagfl``; with finite sync periods, losses, or a
+    partition schedule, tip staleness, duplicate approvals across stale
+    views, and partition/heal convergence become measurable in ``extras``.
+    """
+    if topology is None:
+        topology = topo_lib.full(len(nodes))
+    if gossip is None:
+        gossip = gossip_lib.GossipConfig(sync_period=1.0, seed=sim.seed)
+    return _run_dagfl_events(
+        task, nodes, dcfg, sim, global_val, weighted,
+        lambda state, commit_fn: _GossipLedger(state, topology, gossip, partition),
     )
 
 
@@ -342,6 +519,7 @@ def run_block(
 
 SYSTEMS: Dict[str, Callable] = {
     "dagfl": run_dagfl,
+    "dagfl_gossip": run_dagfl_gossip,
     "google": run_google,
     "async": run_async,
     "block": run_block,

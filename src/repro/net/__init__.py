@@ -1,0 +1,42 @@
+"""Gossip overlay network for per-node DAG replicas (§III.A's bottom layers).
+
+The paper's three-layer architecture gives every node a *local* DAG that is
+"updated by communicating with adjacent nodes"; the simulator historically
+ran all systems against one instantly-consistent global ledger. This package
+supplies the missing network layer:
+
+  ``topology``  adjacency builders (ring, k-regular, Erdős–Rényi, star,
+                full) returning an (N, N) neighbor mask plus per-link
+                latency and drop-probability matrices, with component /
+                partition helpers.
+
+  ``replica``   ``ReplicaSet`` — N per-node ``DagState`` replicas stacked
+                along a leading axis (one vmappable pytree, not N Python
+                objects) over one shared model bank, plus read/write/union
+                and divergence metrics. Rows are allocated from a global
+                sequence number (``publish_local``) so ``dag.merge`` can
+                reconcile replicas row-wise by transaction identity.
+
+  ``gossip``    a jittable anti-entropy round (vmapped pairwise
+                ``dag.merge`` over the neighbor mask — one device call per
+                sync tick), per-edge message-loss sampling, latency-derived
+                sync strides, partition schedules (split for [t_a, t_b),
+                then heal), and the host-side ``GossipNetwork`` driver.
+
+Data flow: ``topology`` builds the overlay → ``replica`` stacks the
+per-node ledgers → ``gossip`` moves rows between them → ``repro.fl.systems.
+run_dagfl_gossip`` interleaves sync ticks with Algorithm-2 prepare/commit
+events so tip staleness, duplicate approvals across stale views, and
+partition/heal convergence become measurable against the shared-ledger
+baseline.
+"""
+from repro.net import gossip, replica, topology
+from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
+from repro.net.replica import ReplicaSet
+from repro.net.topology import Topology
+
+__all__ = [
+    "gossip", "replica", "topology",
+    "GossipConfig", "GossipNetwork", "PartitionSchedule",
+    "ReplicaSet", "Topology",
+]

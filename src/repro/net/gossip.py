@@ -1,0 +1,249 @@
+"""Anti-entropy gossip over the overlay: one jitted device call per tick.
+
+A sync tick folds every node's active neighbors into its local replica with
+``dag.merge`` — vectorized as ``vmap`` over receivers of a ``scan`` over
+senders, so the whole round is a single jitted call on the stacked
+``ReplicaSet`` (no per-node Python loop over merges). Per-edge behavior:
+
+  message loss   each directed message is dropped i.i.d. with the link's
+                 drop probability (``Topology.drop``);
+  link latency   a link with latency ℓ fires only every
+                 ``ceil(ℓ / sync_period)`` ticks — slow links sync less
+                 often (transfer time quantized to the tick grid);
+  partitions     a ``PartitionSchedule`` suppresses cross-component edges
+                 for t ∈ [t_start, t_end), then heals.
+
+``GossipNetwork`` is the host-side driver the simulator talks to: it owns
+the replica set, the tick clock, and the jitted kernels, and interleaves
+``advance(t)`` calls with Algorithm-2 prepare/commit events.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dag as dag_lib
+from repro.core.dag import DagState
+from repro.net import replica as replica_lib
+from repro.net.topology import Topology, partition_matrix
+
+
+@dataclass(frozen=True)
+class PartitionSchedule:
+    """Split the overlay into components for [t_start, t_end), then heal.
+
+    ``assignment`` is an (N,) array of component labels; while active, only
+    edges within a component deliver (§III.A under imperfect networks — the
+    measurable question is how fast replicas reconverge after healing).
+    """
+
+    assignment: np.ndarray
+    t_start: float
+    t_end: float
+
+    def active(self, t: float) -> bool:
+        return self.t_start <= t < self.t_end
+
+
+@dataclass(frozen=True)
+class GossipConfig:
+    """Anti-entropy knobs.
+
+    ``sync_period <= 0`` means an ideal wire: every ``advance`` runs ticks
+    until the replicas reach fixpoint — the shared-ledger limit used as the
+    baseline (and by the acceptance test against ``run_dagfl``).
+    ``max_ticks_per_advance`` bounds work when one advance window spans many
+    periods; elided ticks are no-ops once the state has reached fixpoint
+    (loss-free links), and with loss they only truncate redundant retries.
+    """
+
+    sync_period: float = 1.0
+    seed: int = 0
+    max_ticks_per_advance: int = 64
+
+
+def make_gossip_round():
+    """Jitted (dags, edge_active) -> dags anti-entropy round.
+
+    ``edge_active[i, j]`` = receiver i hears sender j this tick. Merge is
+    commutative/associative, so folding senders in index order is as good as
+    any delivery order.
+    """
+
+    def gossip_round(dags: DagState, edge_active: jnp.ndarray) -> DagState:
+        def receive(dag_i, active_row):
+            def body(carry, xs):
+                dag_j, act = xs
+                merged = dag_lib.merge(carry, dag_j)
+                kept = jax.tree_util.tree_map(
+                    lambda m, c: jnp.where(act, m, c), merged, carry
+                )
+                return kept, None
+
+            out, _ = jax.lax.scan(body, dag_i, (dags, active_row))
+            return out
+
+        return jax.vmap(receive)(dags, edge_active)
+
+    return jax.jit(gossip_round)
+
+
+def stride_matrix(top: Topology, sync_period: float, use_strides: bool = True) -> np.ndarray:
+    """(N, N) int32 tick stride per link: a link with latency ℓ fires every
+    ``ceil(ℓ / sync_period)`` ticks. ``use_strides=False`` (the ideal wire,
+    ``sync_period <= 0``) delivers on every tick regardless of latency.
+    Clipped to 2**30 so pathological latency/period ratios stay int32-safe
+    (such links effectively never fire instead of overflowing to garbage)."""
+    n = top.num_nodes
+    if not use_strides:
+        return np.ones((n, n), np.int32)
+    period = max(float(sync_period), 1e-9)
+    finite_lat = np.where(np.isfinite(top.latency), top.latency, 0.0)
+    stride = np.where(
+        top.adjacency, np.maximum(1.0, np.ceil(finite_lat / period)), 1.0
+    )
+    return np.minimum(stride, 2.0 ** 30).astype(np.int32)
+
+
+def make_edge_sampler(top: Topology, stride: np.ndarray):
+    """Jitted (key, tick, part_mask) -> (N, N) bool active-edge mask."""
+    adj = jnp.asarray(top.adjacency)
+    drop = jnp.asarray(top.drop)
+    stride = jnp.asarray(stride)
+
+    def sample(key, tick, part_mask):
+        live = adj & (jnp.mod(tick, stride) == 0) & part_mask
+        u = jax.random.uniform(key, adj.shape)
+        return live & (u >= drop)
+
+    return jax.jit(sample)
+
+
+class GossipNetwork:
+    """Host-side overlay driver: replicas + tick clock + jitted kernels."""
+
+    def __init__(
+        self,
+        dag: DagState,
+        bank: Any,
+        top: Topology,
+        cfg: GossipConfig = GossipConfig(),
+        partition: Optional[PartitionSchedule] = None,
+    ):
+        n = top.num_nodes
+        self.topology = top
+        self.cfg = cfg
+        self.partition = partition
+        self.replicas = replica_lib.init_replicas(dag, bank, n)
+        self._round = make_gossip_round()
+        self._stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
+        self._max_stride = (
+            int(self._stride[top.adjacency].max()) if top.adjacency.any() else 1
+        )
+        self._sampler = make_edge_sampler(top, self._stride)
+        self._synced = jax.jit(replica_lib.replicas_synced)
+        self._union = jax.jit(replica_lib.merge_all)
+        self._missing = jax.jit(replica_lib.missing_vs_union)
+        self._unchanged = jax.jit(
+            lambda a, b: jnp.all(jnp.stack([
+                jnp.all(x == y)
+                for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+            ]))
+        )
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._all_mask = jnp.ones((n, n), bool)
+        self._part_mask = (
+            jnp.asarray(partition_matrix(partition.assignment))
+            if partition is not None else None
+        )
+        self.tick = 0                # global tick index (drives strides)
+        self.rounds_run = 0          # ticks actually executed
+        period = cfg.sync_period
+        self._next_tick_t = period if period > 0 else 0.0
+
+    # --- replica access ----------------------------------------------------
+
+    @property
+    def bank(self):
+        return self.replicas.bank
+
+    def read(self, i) -> DagState:
+        return replica_lib.read_replica(self.replicas, i)
+
+    def write(self, i, dag: DagState, bank=None) -> None:
+        self.replicas = replica_lib.write_replica(self.replicas, i, dag)
+        if bank is not None:
+            self.replicas = self.replicas._replace(bank=bank)
+
+    def union(self) -> DagState:
+        return self._union(self.replicas.dags)
+
+    def synced(self) -> bool:
+        return bool(self._synced(self.replicas.dags))
+
+    def missing_rows(self, union: Optional[DagState] = None) -> np.ndarray:
+        """(N,) rows each replica lacks vs the union view (0 = converged).
+        Pass a precomputed ``union()`` to avoid re-folding the replicas."""
+        if union is None:
+            union = self.union()
+        return np.asarray(self._missing(self.replicas.dags, union))
+
+    # --- the clock ---------------------------------------------------------
+
+    def _mask_at(self, t: float):
+        if self.partition is not None and self.partition.active(t):
+            return self._part_mask
+        return self._all_mask
+
+    def _tick_once(self, t: float) -> None:
+        self._key, sub = jax.random.split(self._key)
+        edges = self._sampler(sub, jnp.asarray(self.tick, jnp.int32), self._mask_at(t))
+        self.replicas = self.replicas._replace(
+            dags=self._round(self.replicas.dags, edges)
+        )
+        self.tick += 1
+        self.rounds_run += 1
+
+    def advance(self, t: float) -> None:
+        """Run every sync tick scheduled at or before simulation time ``t``."""
+        if self.cfg.sync_period <= 0:
+            self.converge(at_time=t)
+            return
+        ran = 0
+        while self._next_tick_t <= t and ran < self.cfg.max_ticks_per_advance:
+            self._tick_once(self._next_tick_t)
+            self._next_tick_t += self.cfg.sync_period
+            ran += 1
+        if self._next_tick_t <= t:     # window overflowed the cap: fast-forward
+            periods_behind = int((t - self._next_tick_t) // self.cfg.sync_period) + 1
+            self.tick += periods_behind
+            self._next_tick_t += periods_behind * self.cfg.sync_period
+
+    def converge(self, at_time: float = float("inf")) -> bool:
+        """Tick until the replicas reach fixpoint (ideal-wire flush / heal).
+
+        Bounded by ``num_nodes * max_stride`` ticks: the hop diameter is at
+        most num_nodes - 1, and a stride-s link needs up to s ticks before
+        it fires (stride capped at 64 here so pathological latency ratios
+        cannot make the flush unbounded). Returns whether full sync was
+        reached — it cannot be while a partition is active or the overlay
+        is disconnected.
+        """
+        limit = self.topology.num_nodes * min(self._max_stride, 64)
+        # a full stride cycle of unchanged state is a fixpoint: partition
+        # active or overlay disconnected — no further tick can make progress
+        stall_limit = min(self._max_stride, 64)
+        stalled = 0
+        for _ in range(limit):
+            if self.synced():
+                return True
+            before = self.replicas.dags
+            self._tick_once(at_time)
+            stalled = stalled + 1 if bool(self._unchanged(before, self.replicas.dags)) else 0
+            if stalled >= stall_limit:
+                break
+        return self.synced()

@@ -1,0 +1,126 @@
+"""Per-node DAG replicas stacked into one vmappable pytree.
+
+``ReplicaSet`` holds R = num_nodes copies of the ledger as a single
+``DagState`` whose every leaf grew a leading replica axis — one pytree on
+device, not R Python objects — so an anti-entropy round is one
+``vmap``/``scan`` call (see ``repro.net.gossip``) instead of a Python loop
+over merges.
+
+The model bank stays SHARED across replicas: rows are allocated from a
+global publish sequence (``publish_local``), so a transaction occupies the
+same slot on every replica and its payload lives once in the bank. The bank
+thus stands in for a content-addressed model store (replicating N full model
+banks would multiply memory by N for no informational gain); what gossip
+actually propagates — and what the simulator measures — is row *visibility*:
+a replica that has not yet received a row never reads its bank slot, because
+tip selection only sees rows present in the local ``DagState``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dag as dag_lib
+from repro.core.dag import DagState
+
+
+class ReplicaSet(NamedTuple):
+    dags: DagState      # every leaf has leading axis (R, ...)
+    bank: Any           # shared model bank (repro.core.bank pytree)
+
+    @property
+    def num_replicas(self) -> int:
+        return int(self.dags.publisher.shape[0])
+
+
+def init_replicas(dag: DagState, bank: Any, num_replicas: int) -> ReplicaSet:
+    """Every node starts from the same view (the genesis ledger)."""
+    dags = jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x[None], num_replicas, axis=0), dag
+    )
+    return ReplicaSet(dags=dags, bank=bank)
+
+
+def read_replica(rs: ReplicaSet, i) -> DagState:
+    return jax.tree_util.tree_map(lambda x: x[i], rs.dags)
+
+
+def write_replica(rs: ReplicaSet, i, dag: DagState) -> ReplicaSet:
+    dags = jax.tree_util.tree_map(lambda x, v: x.at[i].set(v), rs.dags, dag)
+    return rs._replace(dags=dags)
+
+
+def global_row(dag: DagState, seq):
+    """(row, count watermark) for a globally-sequenced publish — THE row
+    addressing rule replicas must share for ``dag.merge`` to reconcile by
+    identity. Using the global sequence (not the replica-local ``count``)
+    keeps the same transaction at the same slot on every replica; ``count``
+    becomes a watermark, the highest sequence this replica has published
+    past (merge max-combines it with what gossip brings in)."""
+    seq = jnp.asarray(seq, jnp.int32)
+    row = jnp.mod(seq, dag_lib.capacity_of(dag))
+    return row, jnp.maximum(dag.count, seq + 1)
+
+
+def publish_local(
+    dag: DagState,
+    seq,                # () int32 global publish sequence number
+    publisher,
+    time,
+    approvals,
+    accuracy,
+    auth_tag,
+    model_slot,
+) -> DagState:
+    """Publish into a replica at the globally-allocated row (``global_row``)."""
+    row, new_count = global_row(dag, seq)
+    return dag_lib.publish_at(
+        dag, row, new_count, publisher, time, approvals, accuracy, auth_tag,
+        model_slot,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Union view + divergence metrics
+# ---------------------------------------------------------------------------
+
+
+def merge_all(dags: DagState) -> DagState:
+    """Fold ``dag.merge`` across the replica axis — the union ledger.
+
+    Merge is commutative/associative/idempotent, so the fold order is
+    irrelevant; the union is what an omniscient observer (the paper's
+    external agent E) would see, and equals the shared-ledger state when the
+    overlay is fully synchronized.
+    """
+    first = jax.tree_util.tree_map(lambda x: x[0], dags)
+    rest = jax.tree_util.tree_map(lambda x: x[1:], dags)
+
+    def body(carry, one):
+        return dag_lib.merge(carry, one), None
+
+    out, _ = jax.lax.scan(body, first, rest)
+    return out
+
+
+def missing_vs_union(dags: DagState, union: DagState = None) -> jnp.ndarray:
+    """(R,) rows each replica has not yet seen relative to the union view —
+    0 everywhere iff row visibility has fully converged. Pass a precomputed
+    union to avoid re-folding the replicas."""
+    if union is None:
+        union = merge_all(dags)
+    have = (dags.publisher == union.publisher[None]) & (
+        dags.publish_time == union.publish_time[None]
+    )
+    have = have | (union.publisher[None] < 0)
+    return jnp.sum((~have).astype(jnp.int32), axis=-1)
+
+
+def replicas_synced(dags: DagState) -> jnp.ndarray:
+    """() bool — every replica leaf-identical to replica 0."""
+    flags = [
+        jnp.all(x == x[0:1]) for x in jax.tree_util.tree_leaves(dags)
+    ]
+    return jnp.all(jnp.stack(flags))

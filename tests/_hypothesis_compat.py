@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+The tier-1 container does not ship ``hypothesis`` (and nothing may be pip
+installed there), but several modules mix property tests with plain unit
+tests. A module-level ``pytest.importorskip("hypothesis")`` would throw the
+unit tests away with the bathwater, so instead the property-test modules do
+
+    from _hypothesis_compat import given, settings, st
+
+which re-exports the real hypothesis API when it is installed (CI installs it
+via requirements.txt) and otherwise substitutes stubs whose ``@given`` turns
+the test into a single skip — collection always succeeds, unit tests always
+run, property tests run wherever hypothesis exists.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def _skipped():
+                pytest.importorskip("hypothesis")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Any ``st.<name>(...)`` call returns None; @given never runs it."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

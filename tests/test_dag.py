@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import dag as dag_lib
 
@@ -129,3 +129,101 @@ def test_merge_prefers_longer_history():
     b = publish_n(fresh_dag(), 6)
     m = dag_lib.merge(a, b)
     assert int(m.count) == 6
+
+
+# --- merge divergence (gossip replicas, repro.net) --------------------------
+
+
+def leaves_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    )
+
+
+def publish_row(dag, row, publisher, t, approvals=None, seq=None):
+    ap = approvals if approvals is not None else jnp.full((K,), dag_lib.NO_TX, jnp.int32)
+    new_count = jnp.maximum(dag.count, (seq if seq is not None else row) + 1)
+    return dag_lib.publish_at(
+        dag, jnp.asarray(row, jnp.int32), new_count,
+        jnp.asarray(publisher, jnp.int32), jnp.asarray(t, jnp.float32), ap,
+        jnp.asarray(0.5, jnp.float32), jnp.asarray(0.0, jnp.float32),
+        jnp.asarray(row, jnp.int32),
+    )
+
+
+def test_merge_keeps_divergent_rows_from_both_sides():
+    """Replicas that published DIFFERENT rows at the same count must not lose
+    either row (the old 'longer history wins' merge dropped the shorter
+    replica's rows wholesale)."""
+    base = publish_n(fresh_dag(), 2)
+    a = publish_row(base, 2, publisher=1, t=5.0)      # A's row 2
+    b = publish_row(base, 3, publisher=2, t=5.5)      # B's row 3 (global rows)
+    m = dag_lib.merge(a, b)
+    assert int(m.count) == 4
+    assert int(m.publisher[2]) == 1 and int(m.publisher[3]) == 2
+    assert int(jnp.sum(m.publisher >= 0)) == 4
+
+
+def test_merge_is_commutative_and_deterministic():
+    base = publish_n(fresh_dag(), 2)
+    a = publish_row(base, 2, publisher=1, t=5.0)
+    b = publish_row(base, 2, publisher=2, t=6.0)      # same SLOT, different tx
+    ab, ba = dag_lib.merge(a, b), dag_lib.merge(b, a)
+    assert leaves_equal(ab, ba)
+    # later (publish_time, publisher) identity wins the slot
+    assert int(ab.publisher[2]) == 2
+    assert float(ab.publish_time[2]) == 6.0
+
+
+def test_merge_tie_breaks_on_publisher():
+    base = publish_n(fresh_dag(), 2)
+    a = publish_row(base, 2, publisher=1, t=5.0)
+    b = publish_row(base, 2, publisher=4, t=5.0)      # exact same time
+    ab, ba = dag_lib.merge(a, b), dag_lib.merge(b, a)
+    assert leaves_equal(ab, ba)
+    assert int(ab.publisher[2]) == 4
+
+
+def test_merge_is_associative():
+    base = publish_n(fresh_dag(), 1)
+    a = publish_row(base, 1, publisher=1, t=2.0)
+    b = publish_row(base, 2, publisher=2, t=3.0)
+    c = publish_row(base, 1, publisher=3, t=4.0)      # conflicts with a's slot
+    left = dag_lib.merge(dag_lib.merge(a, b), c)
+    right = dag_lib.merge(a, dag_lib.merge(b, c))
+    assert leaves_equal(left, right)
+    assert int(left.publisher[1]) == 3                # later identity won
+
+
+def test_merge_counters_never_decrease():
+    """approval_count for a shared row and the per-node contribution counters
+    union by max — merging can only add knowledge."""
+    base = publish_n(fresh_dag(), 3)
+    approve0 = jnp.asarray([0, dag_lib.NO_TX], jnp.int32)
+    approve01 = jnp.asarray([0, 1], jnp.int32)
+    a = publish_row(base, 3, publisher=1, t=5.0, approvals=approve0)
+    b = publish_row(base, 4, publisher=2, t=5.5, approvals=approve01)
+    for m in (dag_lib.merge(a, b), dag_lib.merge(b, a)):
+        assert int(m.approval_count[0]) == max(
+            int(a.approval_count[0]), int(b.approval_count[0])
+        )
+        assert int(m.approval_count[1]) == int(b.approval_count[1])
+        assert np.all(
+            np.asarray(m.contributing_m0)
+            >= np.maximum(np.asarray(a.contributing_m0), np.asarray(b.contributing_m0))
+        )
+        assert np.all(
+            np.asarray(m.published_per_node)
+            >= np.maximum(np.asarray(a.published_per_node), np.asarray(b.published_per_node))
+        )
+
+
+def test_merge_empty_adopts_other_side():
+    a = fresh_dag()
+    b = publish_n(fresh_dag(), 4)
+    m = dag_lib.merge(a, b)
+    assert leaves_equal(m, dag_lib.merge(b, a))
+    assert int(m.count) == 4 and int(jnp.sum(m.publisher >= 0)) == 4
+    # self-merge is the identity (idempotence)
+    assert leaves_equal(dag_lib.merge(b, b), b)

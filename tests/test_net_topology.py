@@ -1,0 +1,98 @@
+"""Overlay builders: shape/symmetry invariants + connectivity helpers."""
+import numpy as np
+import pytest
+
+from repro.net import topology as topo
+
+
+@pytest.mark.parametrize(
+    "build",
+    [
+        lambda: topo.ring(9),
+        lambda: topo.k_regular(10, 4),
+        lambda: topo.erdos_renyi(14, 0.5, seed=3),
+        lambda: topo.star(8),
+        lambda: topo.full(6),
+    ],
+)
+def test_builder_invariants(build):
+    t = build()
+    n = t.num_nodes
+    assert t.adjacency.shape == (n, n)
+    assert t.latency.shape == (n, n)
+    assert t.drop.shape == (n, n)
+    assert not t.adjacency.diagonal().any()
+    assert (t.adjacency == t.adjacency.T).all()
+    assert np.isinf(t.latency[~t.adjacency]).all()
+    assert (t.drop[~t.adjacency] == 0).all()
+
+
+def test_ring_degrees_and_diameter():
+    t = topo.ring(8)
+    assert (t.degree() == 2).all()
+    assert topo.is_connected(t.adjacency)
+    # 8-cycle diameter = 4 hops; 1 tick per hop at unit period
+    assert topo.path_latency_bound(t, 1.0) == pytest.approx(4.0)
+
+
+def test_k_regular_degree_and_feasibility():
+    assert (topo.k_regular(10, 4).degree() == 4).all()
+    assert (topo.k_regular(10, 5).degree() == 5).all()   # odd k, even n: antipode
+    assert (topo.full(7).degree() == 6).all()
+    with pytest.raises(ValueError):
+        topo.k_regular(9, 5)          # n*k odd: infeasible
+    with pytest.raises(ValueError):
+        topo.k_regular(4, 4)          # k >= n
+
+
+def test_star_hub_and_spokes():
+    t = topo.star(9, hub=2)
+    deg = t.degree()
+    assert deg[2] == 8
+    assert (np.delete(deg, 2) == 1).all()
+    assert topo.is_connected(t.adjacency)
+
+
+def test_erdos_renyi_extremes():
+    empty = topo.erdos_renyi(8, 0.0, seed=0)
+    assert empty.adjacency.sum() == 0
+    assert topo.components(empty.adjacency).max() == 7
+    dense = topo.erdos_renyi(8, 1.0, seed=0)
+    assert (dense.degree() == 7).all()
+
+
+def test_components_and_partition_matrix():
+    t = topo.ring(6)
+    assert (topo.components(t.adjacency) == 0).all()
+    assignment = topo.split_halves(6)
+    mask = topo.partition_matrix(assignment)
+    cut = t.adjacency & ~mask
+    assert cut.sum() == 4            # the two cross-half ring edges, both dirs
+    # the partitioned overlay really has two components
+    assert topo.components(t.adjacency & mask).max() == 1
+
+
+def test_split_random_partitions_full_overlay():
+    assignment = topo.split_random(12, 3, seed=5)
+    assert set(np.unique(assignment)) <= {0, 1, 2}
+    t = topo.full(12)
+    masked = t.adjacency & topo.partition_matrix(assignment)
+    # each component label present becomes exactly one component
+    assert topo.components(masked).max() == len(np.unique(assignment)) - 1
+
+
+def test_latency_jitter_and_drop_land_on_links_only():
+    t = topo.ring(10, link_latency=0.5, latency_jitter=0.3, drop=0.2, seed=1)
+    on = t.adjacency
+    assert (t.latency[on] >= 0.5).all() and (t.latency[on] <= 0.8 + 1e-6).all()
+    assert (t.latency == t.latency.T).all()          # symmetric per-link draw
+    assert (t.drop[on] == np.float32(0.2)).all()
+
+
+def test_latency_bound_accounts_for_slow_links():
+    fast = topo.ring(6, link_latency=0.0)
+    slow = topo.ring(6, link_latency=2.5)
+    # slow links fire every ceil(2.5/1.0)=3 ticks -> 3x the bound
+    assert topo.path_latency_bound(slow, 1.0) == pytest.approx(
+        3.0 * topo.path_latency_bound(fast, 1.0)
+    )

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.mamba import ssd_chunked, ssd_scan
 from repro.models.rwkv import wkv_chunked, wkv_scan
