@@ -1,15 +1,29 @@
-"""Gossip overlay: accuracy-vs-time across sync periods / drop rates, the
-partition scenario vs the ideal shared-ledger baseline, and the wall time of
-one vectorized anti-entropy round at N=25.
+"""Gossip overlay benchmarks: the sync fast path + propagation sweeps.
 
-Claims validated (at bench scale):
+Fast-path measurements (machine-readable copy in ``BENCH_gossip_sync.json``):
+
+* ``gossip/sync_round/...`` — wall time of ONE anti-entropy round across
+  impl ("scan" = PR-1 vmap-over-scan fold, "fused" = winner-reduction
+  kernel path) x N x capacity, with a bitwise equivalence check;
+* ``gossip/dispatch_batching`` — device dispatches per simulated second of
+  a 25-node ``run_dagfl_gossip`` sim: the PR-1 host loop issued two jitted
+  calls per sync tick (edge sampler + round); the tick-batched ``advance``
+  / while-loop ``converge`` issue one call per window.
+
+Accuracy sweeps (claims validated at bench scale):
+
 * sync period -> 0, drop 0 recovers the shared-ledger curve (ideal limit);
 * slower sync / lossier links leave replicas further behind the union view
   (``max_missing`` rows) without destabilizing training;
-* a mid-run partition grows divergence that collapses again after healing;
-* the anti-entropy round is ONE jitted device call over the stacked replica
-  set — ``sync_round`` rows report its per-call wall time for N=25.
+* a mid-run partition grows divergence that collapses again after healing.
+
+``python -m benchmarks.gossip_propagation --smoke`` runs a reduced grid and
+FAILS (exit 1) if the fused round loses bitwise equivalence with the scan
+round or drops below a 2x speedup — the CI perf tripwire.
 """
+import argparse
+import json
+import sys
 import time
 
 import jax
@@ -24,6 +38,8 @@ from repro.net import gossip as gossip_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
 
+JSON_PATH = "BENCH_gossip_sync.json"
+
 
 def _emit_result(tag: str, res, wall_s: float, iterations: int) -> None:
     miss = res.extras.get("missing_rows_final")
@@ -34,6 +50,140 @@ def _emit_result(tag: str, res, wall_s: float, iterations: int) -> None:
         f"curve={fmt_curve(res.iters, res.accs)}"
     )
     emit(tag, (wall_s / max(iterations, 1)) * 1e6, extra)
+
+
+# ---------------------------------------------------------------------------
+# Sync fast path: impl x N x cap round-timing grid
+# ---------------------------------------------------------------------------
+
+
+def _half_full_replicas(num_nodes: int, capacity: int, seed: int):
+    """Realistic occupancy: a half-full ledger replicated N ways."""
+    dag = dag_lib.empty_dag(capacity, 2, num_nodes + 1)
+    rng = np.random.default_rng(seed)
+    for i in range(capacity // 2):
+        dag = dag_lib.publish(
+            dag, jnp.asarray(int(rng.integers(0, num_nodes)), jnp.int32),
+            jnp.float32(i * 0.5), jnp.full((2,), dag_lib.NO_TX, jnp.int32),
+            jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(i, jnp.int32),
+        )
+    return replica_lib.init_replicas(
+        dag, bank=jnp.zeros((capacity, 8)), num_replicas=num_nodes
+    )
+
+
+def _time_round(round_fn, dags, edges, reps: int) -> float:
+    out = round_fn(dags, edges)                          # compile
+    jax.block_until_ready(out.publisher)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = round_fn(out, edges)
+    jax.block_until_ready(out.publisher)
+    return (time.perf_counter() - t0) / reps
+
+
+def run_sync_round_grid(
+    ns=(25, 100), caps=(64, 256), impls=("scan", "fused"),
+    reps: int = 20, seed: int = 0, record: dict = None,
+):
+    """Wall time of ONE anti-entropy round per (impl, N, cap), plus a
+    bitwise scan-vs-fused equivalence check on every grid point."""
+    rows = []
+    for n in ns:
+        top = topo.k_regular(n, 4, seed=seed)
+        edges = jnp.asarray(top.adjacency)
+        for cap in caps:
+            rs = _half_full_replicas(n, cap, seed)
+            outs, per_impl = {}, {}
+            for impl in impls:
+                fn = gossip_lib.make_gossip_round(impl)
+                # the scan path is the slow one; fewer reps keep the grid fast
+                r = max(3, reps // 4) if impl == "scan" else reps
+                per_call = _time_round(fn, rs.dags, edges, r)
+                outs[impl] = fn(rs.dags, edges)
+                per_impl[impl] = per_call
+                emit(
+                    f"gossip/sync_round/{impl}/n{n}_cap{cap}",
+                    per_call * 1e6, f"reps={r}",
+                )
+                rows.append(dict(impl=impl, n=n, cap=cap, us_per_call=per_call * 1e6))
+            equivalent = all(
+                bool(gossip_lib.trees_equal_jit(outs[i], outs[impls[0]]))
+                for i in impls[1:]
+            )
+            speedup = per_impl[impls[0]] / per_impl[impls[-1]]
+            emit(
+                f"gossip/sync_round/speedup/n{n}_cap{cap}", speedup,
+                f"bitwise_equivalent={equivalent}",
+            )
+            rows[-1]["speedup_vs_" + impls[0]] = speedup
+            rows[-1]["bitwise_equivalent"] = equivalent
+    if record is not None:
+        record["sync_round"] = rows
+    return rows
+
+
+def run_dispatch_batching(
+    iterations: int = 150, num_nodes: int = 25, seed: int = 0, record: dict = None,
+):
+    """Device dispatches per simulated second, 25-node end-to-end sim.
+
+    "before" reconstructs the PR-1 host loop cost from the tick count (it
+    dispatched the edge sampler and the round separately for every tick);
+    "after" is the measured ``GossipNetwork.device_calls`` of the batched
+    driver running the same schedule.
+    """
+    dcfg = default_dagfl_config(num_nodes=num_nodes)
+    sim = SimConfig(iterations=iterations, eval_every=25, seed=seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=num_nodes, seed=seed)
+    res = run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.k_regular(num_nodes, 4, seed=seed),
+        gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed),
+    )
+    ticks = int(res.extras["sync_rounds"])
+    calls = int(res.extras["device_calls"])
+    sim_s = float(res.times[-1])
+    before = 2.0 * ticks / sim_s
+    after = calls / sim_s
+    ratio = before / max(after, 1e-12)
+    emit(
+        "gossip/dispatch_batching", ratio,
+        f"nodes={num_nodes};sync_ticks={ticks};device_calls={calls};"
+        f"before_per_sim_s={before:.2f};after_per_sim_s={after:.2f}",
+    )
+    if record is not None:
+        record["dispatch_batching"] = dict(
+            nodes=num_nodes, iterations=iterations, sync_ticks=ticks,
+            device_calls=calls, sim_seconds=sim_s,
+            dispatches_per_sim_second_before=before,
+            dispatches_per_sim_second_after=after,
+            improvement=ratio,
+        )
+    return ratio
+
+
+def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
+    record = dict(record, schema="gossip_sync_bench_v1", backend=jax.default_backend())
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+
+
+def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
+    """The fast-path measurements alone (no accuracy sweeps)."""
+    own = record is None
+    record = {} if own else record
+    run_sync_round_grid(record=record)
+    run_dispatch_batching(record=record)
+    if own:
+        write_bench_json(record, json_path)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Accuracy sweeps (unchanged claims)
+# ---------------------------------------------------------------------------
 
 
 def run_sweep(iterations: int = 150, num_nodes: int = 25, seed: int = 0):
@@ -90,44 +240,45 @@ def run_partition(iterations: int = 150, num_nodes: int = 25, seed: int = 0):
     return res
 
 
-def run_sync_round_timing(num_nodes: int = 25, capacity: int = 512, reps: int = 50,
-                          seed: int = 0):
-    """Wall time of ONE anti-entropy round (single jitted call, N=25)."""
-    dag = dag_lib.empty_dag(capacity, 2, num_nodes + 1)
-    rng = np.random.default_rng(seed)
-    for i in range(capacity // 2):      # half-full ledger, realistic occupancy
-        dag = dag_lib.publish(
-            dag, jnp.asarray(int(rng.integers(0, num_nodes)), jnp.int32),
-            jnp.float32(i * 0.5), jnp.full((2,), dag_lib.NO_TX, jnp.int32),
-            jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(i, jnp.int32),
-        )
-    rs = replica_lib.init_replicas(dag, bank=jnp.zeros((capacity, 8)), num_replicas=num_nodes)
-    top = topo.k_regular(num_nodes, 4, seed=seed)
-    round_fn = gossip_lib.make_gossip_round()
-    edges = jnp.asarray(top.adjacency)
-    dags = round_fn(rs.dags, edges)                      # compile
-    jax.block_until_ready(dags.publisher)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        dags = round_fn(dags, edges)
-    jax.block_until_ready(dags.publisher)
-    per_call = (time.perf_counter() - t0) / reps
-    emit(
-        f"gossip/sync_round_n{num_nodes}",
-        per_call * 1e6,
-        f"capacity={capacity};one_jitted_call=true",
-    )
-    return per_call
-
-
-def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0):
-    run_sync_round_timing(num_nodes=num_nodes, seed=seed)
+def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
+        json_path: str = JSON_PATH):
+    record = {}
+    run_sync_round_grid(record=record)
+    run_dispatch_batching(iterations=iterations, num_nodes=num_nodes, seed=seed,
+                          record=record)
+    write_bench_json(record, json_path)
     run_sweep(iterations=iterations, num_nodes=num_nodes, seed=seed)
     run_partition(iterations=iterations, num_nodes=num_nodes, seed=seed)
+
+
+def smoke(json_path: str = JSON_PATH) -> int:
+    """CI tripwire: reduced grid; fail on lost equivalence or < 2x speedup."""
+    record = {"mode": "smoke"}
+    rows = run_sync_round_grid(
+        ns=(50,), caps=(128,), reps=10, record=record,
+    )
+    write_bench_json(record, json_path)
+    ok = True
+    for row in rows:
+        if "bitwise_equivalent" in row and not row["bitwise_equivalent"]:
+            print(f"# SMOKE FAIL: fused round diverged from scan at {row}")
+            ok = False
+        if row.get("speedup_vs_scan", float("inf")) < 2.0:
+            print(f"# SMOKE FAIL: fused speedup below 2x: {row}")
+            ok = False
+    print(f"# smoke {'ok' if ok else 'FAILED'}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
     from benchmarks.common import header
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid + equivalence/speedup tripwire")
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
     header()
-    run()
+    if args.smoke:
+        sys.exit(smoke(json_path=args.json))
+    run(json_path=args.json)

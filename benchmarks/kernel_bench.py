@@ -8,9 +8,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.kernels import ops, ref
+from repro.kernels.gossip_merge import gossip_winner_nbr
 
 
 def _time(fn, *args, reps=3):
@@ -43,3 +45,28 @@ def run():
     vv = jax.random.normal(key, (B, KV, S, hd))
     emit("kernel/flash_attention/s256", _time(lambda: ops.flash_attention(q, kk, vv)),
          f"jnp_ref_us={_time(lambda: ref.mqa_attention_ref(q, kk, vv)):.0f}")
+
+    # gossip-merge winner selection (the anti-entropy sync hot spot): the
+    # dense Pallas kernel and the degree-compressed lax path vs the dense
+    # pure-lax oracle, on a k=4 overlay at R=64, cap=256
+    rng = np.random.default_rng(0)
+    R, C, D = 64, 256, 5
+    pub = jnp.asarray(rng.integers(-1, R, (R, C)), jnp.int32)
+    t = jnp.asarray(np.where(np.asarray(pub) >= 0, rng.random((R, C)), 0.0), jnp.float32)
+    ac = jnp.asarray(rng.integers(0, 4, (R, C)), jnp.int32)
+    mask = np.zeros((R, R), bool)
+    for off in (1, 2):
+        idx = np.arange(R)
+        mask[idx, (idx + off) % R] = mask[idx, (idx - off) % R] = True
+    np.fill_diagonal(mask, True)
+    mask_j = jnp.asarray(mask)
+    nbr_idx = jnp.asarray(
+        np.argsort(~mask, axis=1, kind="stable")[:, :D].astype(np.int32)
+    )
+    nbr_act = jnp.take_along_axis(mask_j, nbr_idx, axis=1)
+    nbr = jax.jit(gossip_winner_nbr)
+    us_ref = _time(lambda: ref.gossip_winner_ref(t, pub, ac, mask_j))
+    us_nbr = _time(lambda: nbr(t, pub, ac, nbr_idx, nbr_act))
+    emit("kernel/gossip_winner/r64_c256",
+         _time(lambda: ops.gossip_winner(t, pub, ac, mask_j, impl="pallas")),
+         f"jnp_ref_us={us_ref:.0f};nbr_lax_us={us_nbr:.0f}")

@@ -61,7 +61,13 @@ def main() -> None:
             fig6_11_abnormal_nodes.run_four_systems("cnn", "backdoor", 20, iters_mid),
             fig6_11_abnormal_nodes.run_four_systems("lstm", "poisoning", 20, iters_lstm),
         )),
-        ("gossip", lambda: gossip_propagation.run(iters_mid)),
+        # sync fast path: impl x N x cap round grid + dispatch batching,
+        # written to BENCH_gossip_sync.json
+        ("gossip_sync", lambda: gossip_propagation.run_sync_bench()),
+        ("gossip", lambda: (
+            gossip_propagation.run_sweep(iters_mid),
+            gossip_propagation.run_partition(iters_mid),
+        )),
         ("table3", lambda: table3_attack_success.run(iters_mid)),
         ("table4", lambda: table4_contribution_rates.run("cnn", iters_mid, counts=counts)),
         ("ablation", lambda: ablation_weighted.run(150 if args.quick else 200)),

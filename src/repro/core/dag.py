@@ -167,67 +167,158 @@ def isolated_mask(dag: DagState, m: int) -> jnp.ndarray:
     return (dag.publisher >= 0) & (dag.approval_count <= m)
 
 
+# ---------------------------------------------------------------------------
+# Merge: reduction-friendly views shared by the scalar fold and the fused
+# gossip kernel (repro.kernels.gossip_merge)
+# ---------------------------------------------------------------------------
+
+
+class MergeViews(NamedTuple):
+    """One ``DagState`` split by merge role.
+
+    ``keys``        the (publish_time, publisher) row identity the winner
+                    rule reduces over;
+    ``counter``     approval_count — monotone per-identity (union-by-max
+                    across candidates holding the winning identity);
+    ``payload``     row-addressed leaves that follow the winning identity
+                    wholesale (keys included: the winner's bits survive);
+    ``watermarks``  monotone ledger-wide counters merged by element-wise max.
+
+    The scalar two-replica ``merge``, the N-way union fold
+    (``repro.net.replica.merge_all``), and the fused anti-entropy kernel all
+    consume these views, so a new ``DagState`` field only needs to be
+    classified here once to merge correctly everywhere.
+    """
+
+    keys: Tuple[jnp.ndarray, jnp.ndarray]       # (publish_time, publisher)
+    counter: jnp.ndarray                        # approval_count
+    payload: Tuple[Tuple[str, jnp.ndarray], ...]
+    watermarks: Tuple[Tuple[str, jnp.ndarray], ...]
+
+
+def merge_views(dag: DagState) -> MergeViews:
+    return MergeViews(
+        keys=(dag.publish_time, dag.publisher),
+        counter=dag.approval_count,
+        payload=(
+            ("publisher", dag.publisher),
+            ("publish_time", dag.publish_time),
+            ("approvals", dag.approvals),
+            ("accuracy", dag.accuracy),
+            ("auth_tag", dag.auth_tag),
+            ("model_slot", dag.model_slot),
+        ),
+        watermarks=(
+            ("count", dag.count),
+            ("published_per_node", dag.published_per_node),
+            ("contributing_m0", dag.contributing_m0),
+            ("contributing_m1", dag.contributing_m1),
+        ),
+    )
+
+
+def row_winner(
+    local_keys: Tuple[jnp.ndarray, jnp.ndarray],
+    remote_keys: Tuple[jnp.ndarray, jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(take_remote, same_tx) masks — THE row-merge rule.
+
+    A slot occupied on one side only adopts that side; two different
+    transactions resolve to the lexicographically larger
+    ``(publish_time, publisher)`` key (ring semantics make the later
+    transaction the overwriting one; publisher id breaks exact time ties, so
+    the rule is deterministic, commutative, and associative); the same
+    transaction on both sides is ``same_tx`` (counters union-by-max).
+    """
+    l_time, l_pub = local_keys
+    r_time, r_pub = remote_keys
+    l_occ = l_pub >= 0
+    r_occ = r_pub >= 0
+    same_tx = l_occ & r_occ & (l_time == r_time) & (l_pub == r_pub)
+    remote_newer = (r_time > l_time) | ((r_time == l_time) & (r_pub > l_pub))
+    take_remote = (r_occ & ~l_occ) | (r_occ & l_occ & ~same_tx & remote_newer)
+    return take_remote, same_tx
+
+
 def merge(local: DagState, remote: DagState) -> DagState:
     """Anti-entropy reconciliation of two replicas of the same logical ledger
     (§III.A: each node's local DAG is "updated by communicating with adjacent
     nodes").
 
-    Row-wise, keyed by the ``(publish_time, publisher)`` identity of the
-    transaction stored in each slot:
+    Row-wise by the ``row_winner`` rule over ``merge_views``:
 
-    * a slot occupied on only one side adopts that side's row;
-    * two *different* transactions in the same slot (divergent histories, or
-      ring wrap-around on one side) resolve to the LATER one — ring semantics
-      already make the later transaction the overwriting one — with the
-      publisher id breaking exact publish-time ties, so the merge is
-      deterministic, commutative, and associative (gossip order cannot
-      matter);
+    * payload leaves follow the winning ``(publish_time, publisher)``
+      identity wholesale;
     * the *same* transaction on both sides keeps the element-wise MAXIMUM
       approval count: each replica may have credited a disjoint subset of
       approvers, and max is the monotone (CRDT-style) bound that never
       un-approves. Concurrent approvals of one row on two replicas therefore
       collapse (union-by-max, not sum) — ``repro.net`` exposes this as the
-      measurable duplicate-approval deficit of a gossiped deployment.
+      measurable duplicate-approval deficit of a gossiped deployment;
+    * ``count`` and the per-node contribution counters are monotone
+      watermarks and merge by element-wise max, so they never decrease.
 
-    ``count`` and the per-node contribution counters are monotone watermarks
-    and merge by element-wise max, so they never decrease.
+    The N-way fold of this function is what ``merge_select`` (driven by the
+    fused ``repro.kernels.gossip_merge`` winner reduction) computes in one
+    masked pass.
     """
-    l_occ = local.publisher >= 0
-    r_occ = remote.publisher >= 0
-    same_tx = (
-        l_occ & r_occ
-        & (local.publish_time == remote.publish_time)
-        & (local.publisher == remote.publisher)
-    )
-    remote_newer = (remote.publish_time > local.publish_time) | (
-        (remote.publish_time == local.publish_time)
-        & (remote.publisher > local.publisher)
-    )
-    take_remote = (r_occ & ~l_occ) | (r_occ & l_occ & ~same_tx & remote_newer)
+    lv, rv = merge_views(local), merge_views(remote)
+    take_remote, same_tx = row_winner(lv.keys, rv.keys)
+    remote_payload = dict(rv.payload)
 
     def pick(a, b):
         sel = take_remote.reshape(take_remote.shape + (1,) * (a.ndim - 1))
         return jnp.where(sel, b, a)
 
+    approval_count = jnp.where(take_remote, rv.counter, lv.counter)
     approval_count = jnp.where(
-        take_remote, remote.approval_count, local.approval_count
+        same_tx, jnp.maximum(lv.counter, rv.counter), approval_count
     )
-    approval_count = jnp.where(
-        same_tx, jnp.maximum(local.approval_count, remote.approval_count),
-        approval_count,
+    fields = {name: pick(a, remote_payload[name]) for name, a in lv.payload}
+    fields.update(
+        {name: jnp.maximum(a, dict(rv.watermarks)[name]) for name, a in lv.watermarks}
     )
-    return DagState(
-        publisher=pick(local.publisher, remote.publisher),
-        publish_time=pick(local.publish_time, remote.publish_time),
-        approvals=pick(local.approvals, remote.approvals),
-        approval_count=approval_count,
-        accuracy=pick(local.accuracy, remote.accuracy),
-        auth_tag=pick(local.auth_tag, remote.auth_tag),
-        model_slot=pick(local.model_slot, remote.model_slot),
-        count=jnp.maximum(local.count, remote.count),
-        published_per_node=jnp.maximum(
-            local.published_per_node, remote.published_per_node
-        ),
-        contributing_m0=jnp.maximum(local.contributing_m0, remote.contributing_m0),
-        contributing_m1=jnp.maximum(local.contributing_m1, remote.contributing_m1),
-    )
+    return DagState(approval_count=approval_count, **fields)
+
+
+def merge_select(
+    dags: DagState,
+    src: jnp.ndarray,             # (Rr, cap) i32 winner indices per row
+    approval_count: jnp.ndarray,  # (Rr, cap) i32 merged counters per row
+    mask: jnp.ndarray = None,     # (Rr, R) bool dense candidate mask
+    nbr_idx: jnp.ndarray = None,  # (Rr, D) i32 candidate lists (sparse form)
+    nbr_act: jnp.ndarray = None,  # (Rr, D) bool candidate activity
+) -> DagState:
+    """Materialize merged replicas from per-row winner indices.
+
+    The counterpart of the fused winner reduction
+    (``repro.kernels.gossip_merge`` / ``repro.kernels.ref``): payload leaves
+    gather the winning sender's row (``out[i, r] = leaf[src[i, r], r]``),
+    the counter comes from the reduction's union-by-max, and watermark
+    leaves max-reduce over the candidate senders — given either as a dense
+    (Rr, R) ``mask`` (the Pallas/TPU form) or as per-receiver
+    ``(nbr_idx, nbr_act)`` candidate lists (the degree-compressed form; the
+    receiver itself must be an active candidate). ``dags`` is a stacked
+    replica set — every leaf carries a leading (R, ...) axis (see
+    ``repro.net.replica``).
+    """
+    views = merge_views(dags)
+
+    def gather(x):
+        idx = src
+        while idx.ndim < x.ndim:
+            idx = idx[..., None]
+        return jnp.take_along_axis(x, idx, axis=0)
+
+    if mask is not None:
+        def watermark(w):
+            m = mask.reshape(mask.shape + (1,) * (w.ndim - 1))
+            return jnp.max(jnp.where(m, w[None], 0), axis=1)
+    else:
+        def watermark(w):
+            m = nbr_act.reshape(nbr_act.shape + (1,) * (w.ndim - 1))
+            return jnp.max(jnp.where(m, w[nbr_idx], 0), axis=1)
+
+    fields = {name: gather(x) for name, x in views.payload}
+    fields.update({name: watermark(w) for name, w in views.watermarks})
+    return DagState(approval_count=approval_count, **fields)

@@ -16,6 +16,7 @@ what makes its rounds the slowest (Table II).
 """
 from __future__ import annotations
 
+import functools
 import heapq
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -106,6 +107,47 @@ def _late_contributions(dag, mid_snapshot: Dict, extras: Dict) -> None:
 # ---------------------------------------------------------------------------
 # DAG-FL: one event-driven Algorithm-2 loop, two ledger backends
 # ---------------------------------------------------------------------------
+#
+# All jit wrappers live at module level (cached): a benchmark sweep that
+# constructs a fresh backend/task per run used to re-trace prepare + commit
+# every time; now equal configs and tasks (frozen dataclasses) share one
+# trace.
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_of(fn):
+    """jit cache keyed by function identity — every backend instance using
+    the same commit body shares one traced executable."""
+    return jax.jit(fn)
+
+
+def _identity_train(params, batch, key):
+    """Lazy-node 'training' (§V.A): republish the aggregated model as-is."""
+    return params, {}
+
+
+def _build_stage_jits(dcfg, task, weighted):
+    prep_normal, commit_fn = make_dagfl_stages(
+        dcfg, task.eval_fn, make_epoch_train(task), weighted
+    )
+    prep_lazy, _ = make_dagfl_stages(dcfg, task.eval_fn, _identity_train, weighted)
+    return jax.jit(prep_normal), jax.jit(prep_lazy), commit_fn
+
+
+_stage_jits_cached = functools.lru_cache(maxsize=None)(_build_stage_jits)
+
+
+def _stage_jits(dcfg, task, weighted):
+    """(jitted prepare, jitted lazy prepare, commit body) for a run.
+
+    ``DagFLConfig`` and the paper tasks are frozen dataclasses, so sweeps
+    that rebuild an equal task per run hit the cache and stop re-tracing
+    stages 1-3; an unhashable ad-hoc task just falls back to a fresh trace.
+    """
+    try:
+        return _stage_jits_cached(dcfg, task, weighted)
+    except TypeError:
+        return _build_stage_jits(dcfg, task, weighted)
 
 
 class _SharedLedger:
@@ -115,7 +157,7 @@ class _SharedLedger:
 
     def __init__(self, state, commit_fn):
         self.dag, self.bank = state.dag, state.bank
-        self._commit = jax.jit(commit_fn)
+        self._commit = _jit_of(commit_fn)
 
     def view(self, node_id):
         return self.dag
@@ -155,12 +197,23 @@ def _run_dagfl_events(task, nodes, dcfg, sim, global_val, weighted, make_backend
     params0 = task.init(jax.random.PRNGKey(sim.seed))
     state = ctrl.genesis(params0, gv)
 
-    identity_train = lambda p, b, k: (p, {})
-    epoch_train = make_epoch_train(task)
-    prep_normal, commit_fn = make_dagfl_stages(dcfg, task.eval_fn, epoch_train, weighted)
-    prep_lazy, _ = make_dagfl_stages(dcfg, task.eval_fn, identity_train, weighted)
-    prep_normal, prep_lazy = jax.jit(prep_normal), jax.jit(prep_lazy)
+    prep_normal, prep_lazy, commit_fn = _stage_jits(dcfg, task, weighted)
     backend = make_backend(state, commit_fn)
+
+    if sim.iterations == 0:
+        # no Poisson starts -> no commits: report the genesis state instead
+        # of reaching the trailing eval with an unbound completion time
+        union = backend.union_dag()
+        extras = {
+            "contribution_m0": np.asarray(contribution_rates(union, 0)),
+            "contribution_m1": np.asarray(contribution_rates(union, 1)),
+            "published": np.asarray(union.published_per_node),
+            "behaviors": [n.behavior for n in nodes],
+            "dag": union,
+        }
+        extras.update(backend.extras(union))
+        empty = np.zeros((0,))
+        return SimResult(backend.name, empty, empty, empty, 0.0, params0, extras)
 
     # joint backdoor attack: backdoor nodes up-weight backdoor publishers
     is_bd = np.array([n.behavior == "backdoor" for n in nodes] + [False])
@@ -277,7 +330,7 @@ class _GossipLedger:
             state.dag, state.bank, topology, gossip, partition
         )
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
-        self._commit = jax.jit(_gossip_commit)
+        self._commit = _jit_of(_gossip_commit)
         self.approvals_issued = 0
         self.divergence = []
 
@@ -313,6 +366,7 @@ class _GossipLedger:
         return {
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
+            "device_calls": self.net.device_calls,
             "synced_final": self.net.synced(),
             "missing_rows_final": self.net.missing_rows(union),
             # duplicate-approval deficit: credits issued by committers vs

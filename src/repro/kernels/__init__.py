@@ -1,5 +1,11 @@
 from repro.kernels import ops, ref
-from repro.kernels.ops import decode_attention, fedavg, flash_attention, model_distance
+from repro.kernels.ops import (
+    decode_attention,
+    fedavg,
+    flash_attention,
+    gossip_winner,
+    model_distance,
+)
 
 __all__ = [
     "ops",
@@ -7,5 +13,6 @@ __all__ = [
     "decode_attention",
     "fedavg",
     "flash_attention",
+    "gossip_winner",
     "model_distance",
 ]

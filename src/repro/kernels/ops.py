@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
+from repro.kernels.gossip_merge import gossip_winner
 from repro.kernels.model_distance import model_distance_pallas
 from repro.kernels.wkv import wkv_pallas
 from repro.kernels import ref
@@ -49,4 +50,7 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
     return wkv_pallas(r, k, v, logw, u, chunk=chunk, interpret=_interpret_default())
 
 
-__all__ = ["fedavg", "model_distance", "flash_attention", "decode_attention", "wkv", "ref"]
+__all__ = [
+    "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
+    "gossip_winner", "ref",
+]

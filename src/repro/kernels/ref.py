@@ -7,6 +7,54 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def gossip_winner_ref(
+    publish_time: jnp.ndarray,    # (R, cap) f32
+    publisher: jnp.ndarray,       # (R, cap) i32, -1 = empty row
+    approval_count: jnp.ndarray,  # (R, cap) i32
+    mask: jnp.ndarray,            # (Rr, R) bool — receiver i hears sender j
+):
+    """Per-row gossip-merge winner selection (oracle + CPU fast path).
+
+    For each receiver i (row of ``mask``; the diagonal entry marks the
+    receiver's own replica as a candidate) and ledger row r, the winner is
+    the occupied candidate with the lexicographically largest
+    ``(publish_time, publisher)`` key; the merged ``approval_count`` is the
+    max over candidates holding that identity (CRDT union-by-max, see
+    ``repro.core.dag.merge``). Key ties prefer the receiver itself, then the
+    lowest sender index — the visit order of the sequential merge fold, so
+    the reduction is bitwise-faithful to it.
+
+    Returns (src (Rr, cap) i32 winner indices, ac (Rr, cap) i32 counters).
+    ``mask`` may be rectangular: ``merge_all``'s union fold is the Rr=1 case.
+    """
+    rr, r = mask.shape
+    # the receiver is ALWAYS a candidate (the sequential fold starts from the
+    # local replica) — force the diagonal so a mask built from a zero-diagonal
+    # adjacency cannot zero an occupied local row's counter
+    mask = mask | jnp.eye(rr, r, dtype=bool)
+    occ = publisher >= 0
+    valid = mask[:, :, None] & occ[None]                      # (Rr, R, cap)
+    tm = jnp.where(valid, publish_time[None], -jnp.inf)
+    best_t = jnp.max(tm, axis=1)                              # (Rr, cap)
+    tie = valid & (tm == best_t[:, None])
+    pm = jnp.where(tie, publisher[None], jnp.iinfo(jnp.int32).min)
+    best_p = jnp.max(pm, axis=1)
+    win = tie & (pm == best_p[:, None])                       # winning identity
+    idx = jnp.arange(r, dtype=jnp.int32)[None, :, None]
+    first = jnp.min(jnp.where(win, idx, r), axis=1)           # (Rr, cap)
+    rows = jnp.arange(rr, dtype=jnp.int32)
+    # receiver i's own replica is sender i; it wins ties iff it holds the key
+    self_win = (
+        mask[rows, rows][:, None]
+        & occ[:rr]
+        & (publish_time[:rr] == best_t)
+        & (publisher[:rr] == best_p)
+    )
+    src = jnp.where(self_win | (first >= r), rows[:, None], first)
+    ac = jnp.max(jnp.where(win, approval_count[None], 0), axis=1)
+    return src.astype(jnp.int32), ac.astype(jnp.int32)
+
+
 def fedavg_ref(weights: jnp.ndarray, models: jnp.ndarray) -> jnp.ndarray:
     """Eq. (1): weighted average of k flattened models.
 

@@ -17,11 +17,15 @@ supplies the missing network layer:
                 sequence number (``publish_local``) so ``dag.merge`` can
                 reconcile replicas row-wise by transaction identity.
 
-  ``gossip``    a jittable anti-entropy round (vmapped pairwise
-                ``dag.merge`` over the neighbor mask — one device call per
-                sync tick), per-edge message-loss sampling, latency-derived
-                sync strides, partition schedules (split for [t_a, t_b),
-                then heal), and the host-side ``GossipNetwork`` driver.
+  ``gossip``    a jittable anti-entropy round — the row-wise ``dag.merge``
+                fold fused into one masked winner reduction over the sender
+                axis (``repro.kernels.gossip_merge``; the PR-1 vmap/scan
+                fold survives as ``impl="scan"``) — plus per-edge
+                message-loss sampling, latency-derived sync strides,
+                partition schedules (split for [t_a, t_b), then heal), and
+                the host-side ``GossipNetwork`` driver, which batches each
+                advance window into ONE jitted ``lax.scan`` and runs
+                ``converge`` as ONE jitted ``lax.while_loop``.
 
 Data flow: ``topology`` builds the overlay → ``replica`` stacks the
 per-node ledgers → ``gossip`` moves rows between them → ``repro.fl.systems.

@@ -1,9 +1,29 @@
-"""Anti-entropy gossip over the overlay: one jitted device call per tick.
+"""Anti-entropy gossip over the overlay: device-resident, tick-batched sync.
 
 A sync tick folds every node's active neighbors into its local replica with
-``dag.merge`` — vectorized as ``vmap`` over receivers of a ``scan`` over
-senders, so the whole round is a single jitted call on the stacked
-``ReplicaSet`` (no per-node Python loop over merges). Per-edge behavior:
+the ``dag.merge`` row rule. Two interchangeable round implementations:
+
+  ``impl="fused"``   the fast path — per-row winner selection over ALL
+                     senders in one masked reduction
+                     (``repro.kernels.gossip_merge``; Pallas on TPU, its
+                     pure-lax oracle elsewhere) followed by one payload
+                     gather (``dag.merge_select``). O(log N) reduction
+                     depth, no N² ``DagState`` intermediates.
+  ``impl="scan"``    the PR-1 reference — ``vmap`` over receivers of a
+                     ``lax.scan`` of sequential two-replica merges. Kept as
+                     the bitwise ground truth (``tests/test_gossip_merge``)
+                     and the benchmark baseline.
+
+Dispatch batching: ``advance(t)`` no longer issues one jitted call per tick.
+It precomputes the (tick index, partition-active) schedule for the whole
+window host-side and runs ONE jitted ``lax.scan`` over it (PRNG keys split
+inside the scan, so a batched window is bitwise the sequential ticks), and
+``converge()`` runs the whole fixpoint iteration in ONE jitted
+``lax.while_loop`` whose predicate (replicas synced / progress stalled) is
+evaluated on device. ``GossipNetwork.device_calls`` counts dispatches so
+benchmarks can report the batching win.
+
+Per-edge behavior (unchanged semantics):
 
   message loss   each directed message is dropped i.i.d. with the link's
                  drop probability (``Topology.drop``);
@@ -14,11 +34,13 @@ senders, so the whole round is a single jitted call on the stacked
                  for t ∈ [t_start, t_end), then heals.
 
 ``GossipNetwork`` is the host-side driver the simulator talks to: it owns
-the replica set, the tick clock, and the jitted kernels, and interleaves
-``advance(t)`` calls with Algorithm-2 prepare/commit events.
+the replica set, the tick clock, and the schedule bookkeeping; all jitted
+entry points live at module level (cached per ``impl``), so constructing
+many networks in a benchmark sweep re-traces nothing.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -28,6 +50,7 @@ import numpy as np
 
 from repro.core import dag as dag_lib
 from repro.core.dag import DagState
+from repro.kernels import gossip_merge as gossip_kernel
 from repro.net import replica as replica_lib
 from repro.net.topology import Topology, partition_matrix
 
@@ -59,37 +82,222 @@ class GossipConfig:
     ``max_ticks_per_advance`` bounds work when one advance window spans many
     periods; elided ticks are no-ops once the state has reached fixpoint
     (loss-free links), and with loss they only truncate redundant retries.
+    ``impl`` picks the round implementation: "fused" (kernel reduction;
+    Pallas on TPU, pure-lax elsewhere), "scan" (PR-1 reference fold), or the
+    explicit backends "pallas" / "lax".
     """
 
     sync_period: float = 1.0
     seed: int = 0
     max_ticks_per_advance: int = 64
+    impl: str = "fused"
 
 
-def make_gossip_round():
-    """Jitted (dags, edge_active) -> dags anti-entropy round.
+# ---------------------------------------------------------------------------
+# Shared device-side pieces (module-level: traced once per impl, not per
+# GossipNetwork instance)
+# ---------------------------------------------------------------------------
+
+
+def trees_equal(a, b) -> jnp.ndarray:
+    """() bool — leaf-wise exact equality of two pytrees (same treedef).
+
+    Shared by the converge fixpoint predicate and host-side stall checks;
+    module-level so repeated ``GossipNetwork`` construction re-traces
+    nothing.
+    """
+    flags = [
+        jnp.all(x == y)
+        for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+    ]
+    return jnp.all(jnp.stack(flags))
+
+
+trees_equal_jit = jax.jit(trees_equal)
+
+
+def _sample_edges(key, tick, part_mask, adj, drop, stride):
+    """(N, N) bool active-edge mask for one tick."""
+    live = adj & (jnp.mod(tick, stride) == 0) & part_mask
+    u = jax.random.uniform(key, adj.shape)
+    return live & (u >= drop)
+
+
+def _neighbor_table(adjacency: np.ndarray):
+    """Static per-receiver candidate lists from the overlay adjacency.
+
+    Returns ``(nbr_idx (R, D) int32, nbr_valid (R, D) bool)`` where D is the
+    max degree + 1: each row lists the receiver itself plus its neighbors,
+    padded (``nbr_valid`` false). Every sampled edge mask is a subset of the
+    adjacency, so the table is computed ONCE host-side and the per-tick
+    winner reduction runs over D candidates instead of all R senders —
+    O(R * D * cap) work, the term that makes the fused round beat the
+    sequential fold on sparse overlays.
+    """
+    adj = np.asarray(adjacency, bool)
+    r = adj.shape[0]
+    m = adj | np.eye(r, dtype=bool)
+    deg = int(m.sum(axis=1).max())
+    order = np.argsort(~m, axis=1, kind="stable")[:, :deg].astype(np.int32)
+    valid = np.take_along_axis(m, order, axis=1)
+    return order, valid
+
+
+@functools.lru_cache(maxsize=64)
+def _neighbor_table_cached(mask_bytes: bytes, r: int):
+    m = np.frombuffer(mask_bytes, bool).reshape(r, r)
+    nbr_idx, nbr_valid = _neighbor_table(m)
+    return jnp.asarray(nbr_idx), jnp.asarray(nbr_valid)
+
+
+def _round_scan(dags: DagState, edge_active: jnp.ndarray) -> DagState:
+    """PR-1 reference round: vmap over receivers of a scan over senders."""
+
+    def receive(dag_i, active_row):
+        def body(carry, xs):
+            dag_j, act = xs
+            merged = dag_lib.merge(carry, dag_j)
+            kept = jax.tree_util.tree_map(
+                lambda m, c: jnp.where(act, m, c), merged, carry
+            )
+            return kept, None
+
+        out, _ = jax.lax.scan(body, dag_i, (dags, active_row))
+        return out
+
+    return jax.vmap(receive)(dags, edge_active)
+
+
+def _round_fused(
+    dags: DagState, edge_active: jnp.ndarray,
+    nbr_idx: jnp.ndarray, nbr_valid: jnp.ndarray, impl: str,
+) -> DagState:
+    """Fast path: one winner reduction + one payload gather per tick.
+
+    "pallas" runs the dense blocked kernel over the full (receivers x cap)
+    grid (the TPU shape; interpreted elsewhere); "lax" — the default off-TPU
+    — gathers each receiver's candidate list and reduces over the max degree
+    instead of the whole sender axis.
+    """
+    if impl == "fused":
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    n = edge_active.shape[0]
+    if impl == "pallas":
+        mask = edge_active | jnp.eye(n, dtype=bool)  # the receiver is a candidate
+        src, ac = gossip_kernel.gossip_winner_pallas(
+            dags.publish_time, dags.publisher, dags.approval_count, mask,
+            interpret=jax.default_backend() != "tpu",
+        )
+        return dag_lib.merge_select(dags, src, ac, mask=mask)
+    if impl != "lax":
+        raise ValueError(f"unknown gossip round impl: {impl!r}")
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    act = jnp.take_along_axis(edge_active, nbr_idx, axis=1) | (nbr_idx == rows)
+    act = act & nbr_valid
+    src, ac = gossip_kernel.gossip_winner_nbr(
+        dags.publish_time, dags.publisher, dags.approval_count, nbr_idx, act
+    )
+    return dag_lib.merge_select(dags, src, ac, nbr_idx=nbr_idx, nbr_act=act)
+
+
+def _apply_round(
+    dags: DagState, edge_active: jnp.ndarray,
+    nbr_idx: jnp.ndarray, nbr_valid: jnp.ndarray, impl: str,
+) -> DagState:
+    if impl == "scan":
+        return _round_scan(dags, edge_active)
+    return _round_fused(dags, edge_active, nbr_idx, nbr_valid, impl)
+
+
+@functools.lru_cache(maxsize=None)
+def _round_jit(impl: str):
+    return jax.jit(functools.partial(_apply_round, impl=impl))
+
+
+def make_gossip_round(impl: str = "fused"):
+    """(dags, edge_active) -> dags anti-entropy round (one jitted call).
 
     ``edge_active[i, j]`` = receiver i hears sender j this tick. Merge is
     commutative/associative, so folding senders in index order is as good as
-    any delivery order.
+    any delivery order — which is also why the non-"scan" impls may replace
+    the fold with a masked winner reduction (bitwise-equal, tested). The
+    fused impls derive the candidate table from the concrete ``edge_active``
+    (cached), so this entry point wants concrete masks; jitted drivers
+    (``GossipNetwork``) precompute the table from the static adjacency
+    instead.
+    """
+    if impl == "scan":
+        round_scan = _round_jit(impl)
+        return lambda dags, edge_active: round_scan(dags, edge_active, None, None)
+
+    def round_fn(dags, edge_active):
+        m = np.asarray(edge_active, bool)
+        nbr_idx, nbr_valid = _neighbor_table_cached(m.tobytes(), m.shape[0])
+        return _round_jit(impl)(dags, edge_active, nbr_idx, nbr_valid)
+
+    return round_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _advance_jit(impl: str):
+    """One jitted lax.scan running a whole advance window of sync ticks.
+
+    The PRNG key is split inside the scan exactly like the sequential
+    per-tick path did host-side, so a batched window is bitwise-identical to
+    running its ticks one call at a time. Retraces once per distinct window
+    length (a handful of lengths occur in practice).
     """
 
-    def gossip_round(dags: DagState, edge_active: jnp.ndarray) -> DagState:
-        def receive(dag_i, active_row):
-            def body(carry, xs):
-                dag_j, act = xs
-                merged = dag_lib.merge(carry, dag_j)
-                kept = jax.tree_util.tree_map(
-                    lambda m, c: jnp.where(act, m, c), merged, carry
-                )
-                return kept, None
+    def advance(dags, key, ticks, part_active, adj, drop, stride, part_mask,
+                nbr_idx, nbr_valid):
+        def body(carry, xs):
+            dags, key = carry
+            tick, pact = xs
+            key, sub = jax.random.split(key)
+            pm = jnp.where(pact, part_mask, True)
+            edges = _sample_edges(sub, tick, pm, adj, drop, stride)
+            return (_apply_round(dags, edges, nbr_idx, nbr_valid, impl), key), None
 
-            out, _ = jax.lax.scan(body, dag_i, (dags, active_row))
-            return out
+        (dags, key), _ = jax.lax.scan(body, (dags, key), (ticks, part_active))
+        return dags, key
 
-        return jax.vmap(receive)(dags, edge_active)
+    return jax.jit(advance)
 
-    return jax.jit(gossip_round)
+
+@functools.lru_cache(maxsize=None)
+def _converge_jit(impl: str):
+    """Device-resident fixpoint flush: ONE jitted lax.while_loop.
+
+    The predicate — not yet synced, tick budget left, progress not stalled
+    for a full stride cycle — runs on device, replacing the host loop that
+    dispatched a sync round, an equality check, and a synced check per tick.
+    """
+
+    def converge(dags, key, tick, part_mask, adj, drop, stride, limit, stall_limit,
+                 nbr_idx, nbr_valid):
+        def cond(carry):
+            dags, _key, _tick, stalled, done = carry
+            return (
+                ~replica_lib.replicas_synced(dags)
+                & (done < limit)
+                & (stalled < stall_limit)
+            )
+
+        def body(carry):
+            dags, key, tick, stalled, done = carry
+            key, sub = jax.random.split(key)
+            edges = _sample_edges(sub, tick, part_mask, adj, drop, stride)
+            new = _apply_round(dags, edges, nbr_idx, nbr_valid, impl)
+            stalled = jnp.where(trees_equal(new, dags), stalled + 1, 0)
+            return (new, key, tick + 1, stalled, done + 1)
+
+        dags, key, tick, _, done = jax.lax.while_loop(
+            cond, body,
+            (dags, key, tick, jnp.int32(0), jnp.int32(0)),
+        )
+        return dags, key, tick, done, replica_lib.replicas_synced(dags)
+
+    return jax.jit(converge)
 
 
 def stride_matrix(top: Topology, sync_period: float, use_strides: bool = True) -> np.ndarray:
@@ -109,22 +317,8 @@ def stride_matrix(top: Topology, sync_period: float, use_strides: bool = True) -
     return np.minimum(stride, 2.0 ** 30).astype(np.int32)
 
 
-def make_edge_sampler(top: Topology, stride: np.ndarray):
-    """Jitted (key, tick, part_mask) -> (N, N) bool active-edge mask."""
-    adj = jnp.asarray(top.adjacency)
-    drop = jnp.asarray(top.drop)
-    stride = jnp.asarray(stride)
-
-    def sample(key, tick, part_mask):
-        live = adj & (jnp.mod(tick, stride) == 0) & part_mask
-        u = jax.random.uniform(key, adj.shape)
-        return live & (u >= drop)
-
-    return jax.jit(sample)
-
-
 class GossipNetwork:
-    """Host-side overlay driver: replicas + tick clock + jitted kernels."""
+    """Host-side overlay driver: replicas + tick clock + schedule batching."""
 
     def __init__(
         self,
@@ -139,29 +333,25 @@ class GossipNetwork:
         self.cfg = cfg
         self.partition = partition
         self.replicas = replica_lib.init_replicas(dag, bank, n)
-        self._round = make_gossip_round()
-        self._stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
+        stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
         self._max_stride = (
-            int(self._stride[top.adjacency].max()) if top.adjacency.any() else 1
+            int(stride[top.adjacency].max()) if top.adjacency.any() else 1
         )
-        self._sampler = make_edge_sampler(top, self._stride)
-        self._synced = jax.jit(replica_lib.replicas_synced)
-        self._union = jax.jit(replica_lib.merge_all)
-        self._missing = jax.jit(replica_lib.missing_vs_union)
-        self._unchanged = jax.jit(
-            lambda a, b: jnp.all(jnp.stack([
-                jnp.all(x == y)
-                for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
-            ]))
-        )
+        self._adj = jnp.asarray(top.adjacency)
+        self._drop = jnp.asarray(top.drop)
+        self._stride = jnp.asarray(stride)
+        nbr_idx, nbr_valid = _neighbor_table(top.adjacency)
+        self._nbr_idx = jnp.asarray(nbr_idx)
+        self._nbr_valid = jnp.asarray(nbr_valid)
         self._key = jax.random.PRNGKey(cfg.seed)
         self._all_mask = jnp.ones((n, n), bool)
         self._part_mask = (
             jnp.asarray(partition_matrix(partition.assignment))
-            if partition is not None else None
+            if partition is not None else self._all_mask
         )
         self.tick = 0                # global tick index (drives strides)
         self.rounds_run = 0          # ticks actually executed
+        self.device_calls = 0        # jitted sync dispatches issued
         period = cfg.sync_period
         self._next_tick_t = period if period > 0 else 0.0
 
@@ -180,17 +370,19 @@ class GossipNetwork:
             self.replicas = self.replicas._replace(bank=bank)
 
     def union(self) -> DagState:
-        return self._union(self.replicas.dags)
+        return replica_lib.merge_all_jit(self.replicas.dags)
 
     def synced(self) -> bool:
-        return bool(self._synced(self.replicas.dags))
+        return bool(replica_lib.replicas_synced_jit(self.replicas.dags))
 
     def missing_rows(self, union: Optional[DagState] = None) -> np.ndarray:
         """(N,) rows each replica lacks vs the union view (0 = converged).
         Pass a precomputed ``union()`` to avoid re-folding the replicas."""
         if union is None:
             union = self.union()
-        return np.asarray(self._missing(self.replicas.dags, union))
+        return np.asarray(
+            replica_lib.missing_vs_union_jit(self.replicas.dags, union)
+        )
 
     # --- the clock ---------------------------------------------------------
 
@@ -199,25 +391,40 @@ class GossipNetwork:
             return self._part_mask
         return self._all_mask
 
-    def _tick_once(self, t: float) -> None:
-        self._key, sub = jax.random.split(self._key)
-        edges = self._sampler(sub, jnp.asarray(self.tick, jnp.int32), self._mask_at(t))
-        self.replicas = self.replicas._replace(
-            dags=self._round(self.replicas.dags, edges)
+    def _run_ticks(self, ticks, part_active) -> None:
+        """Execute a batch of sync ticks as ONE jitted device call."""
+        dags, self._key = _advance_jit(self.cfg.impl)(
+            self.replicas.dags, self._key,
+            jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
+            self._adj, self._drop, self._stride, self._part_mask,
+            self._nbr_idx, self._nbr_valid,
         )
-        self.tick += 1
-        self.rounds_run += 1
+        self.replicas = self.replicas._replace(dags=dags)
+        self.tick += len(ticks)
+        self.rounds_run += len(ticks)
+        self.device_calls += 1
+
+    def _tick_once(self, t: float) -> None:
+        """One sync tick at simulation time ``t`` (a batch of one — the
+        reference granularity the batched ``advance`` is tested against)."""
+        pact = self.partition is not None and self.partition.active(t)
+        self._run_ticks([self.tick], [pact])
 
     def advance(self, t: float) -> None:
-        """Run every sync tick scheduled at or before simulation time ``t``."""
+        """Run every sync tick scheduled at or before simulation time ``t``
+        as one batched dispatch."""
         if self.cfg.sync_period <= 0:
             self.converge(at_time=t)
             return
-        ran = 0
-        while self._next_tick_t <= t and ran < self.cfg.max_ticks_per_advance:
-            self._tick_once(self._next_tick_t)
-            self._next_tick_t += self.cfg.sync_period
-            ran += 1
+        ticks, pacts = [], []
+        nt = self._next_tick_t
+        while nt <= t and len(ticks) < self.cfg.max_ticks_per_advance:
+            ticks.append(self.tick + len(ticks))
+            pacts.append(self.partition is not None and self.partition.active(nt))
+            nt += self.cfg.sync_period
+        if ticks:
+            self._run_ticks(ticks, pacts)
+        self._next_tick_t = nt
         if self._next_tick_t <= t:     # window overflowed the cap: fast-forward
             periods_behind = int((t - self._next_tick_t) // self.cfg.sync_period) + 1
             self.tick += periods_behind
@@ -226,24 +433,25 @@ class GossipNetwork:
     def converge(self, at_time: float = float("inf")) -> bool:
         """Tick until the replicas reach fixpoint (ideal-wire flush / heal).
 
-        Bounded by ``num_nodes * max_stride`` ticks: the hop diameter is at
-        most num_nodes - 1, and a stride-s link needs up to s ticks before
-        it fires (stride capped at 64 here so pathological latency ratios
-        cannot make the flush unbounded). Returns whether full sync was
+        ONE jitted ``lax.while_loop`` with an on-device predicate, bounded
+        by ``num_nodes * max_stride`` ticks: the hop diameter is at most
+        num_nodes - 1, and a stride-s link needs up to s ticks before it
+        fires (stride capped at 64 here so pathological latency ratios
+        cannot make the flush unbounded). A full stride cycle of unchanged
+        state is a fixpoint (partition active or overlay disconnected — no
+        further tick can make progress). Returns whether full sync was
         reached — it cannot be while a partition is active or the overlay
         is disconnected.
         """
         limit = self.topology.num_nodes * min(self._max_stride, 64)
-        # a full stride cycle of unchanged state is a fixpoint: partition
-        # active or overlay disconnected — no further tick can make progress
         stall_limit = min(self._max_stride, 64)
-        stalled = 0
-        for _ in range(limit):
-            if self.synced():
-                return True
-            before = self.replicas.dags
-            self._tick_once(at_time)
-            stalled = stalled + 1 if bool(self._unchanged(before, self.replicas.dags)) else 0
-            if stalled >= stall_limit:
-                break
-        return self.synced()
+        dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl)(
+            self.replicas.dags, self._key, jnp.asarray(self.tick, jnp.int32),
+            self._mask_at(at_time), self._adj, self._drop, self._stride,
+            limit, stall_limit, self._nbr_idx, self._nbr_valid,
+        )
+        self.replicas = self.replicas._replace(dags=dags)
+        self.tick = int(tick)
+        self.rounds_run += int(done)
+        self.device_calls += 1
+        return bool(synced)

@@ -2,9 +2,9 @@
 
 ``ReplicaSet`` holds R = num_nodes copies of the ledger as a single
 ``DagState`` whose every leaf grew a leading replica axis — one pytree on
-device, not R Python objects — so an anti-entropy round is one
-``vmap``/``scan`` call (see ``repro.net.gossip``) instead of a Python loop
-over merges.
+device, not R Python objects — so an anti-entropy round is one fused masked
+reduction over the sender axis (see ``repro.net.gossip`` and
+``repro.kernels.gossip_merge``) instead of a Python loop over merges.
 
 The model bank stays SHARED across replicas: rows are allocated from a
 global publish sequence (``publish_local``), so a transaction occupies the
@@ -17,6 +17,7 @@ tip selection only sees rows present in the local ``DagState``.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import dag as dag_lib
 from repro.core.dag import DagState
+from repro.kernels import ref as kernel_ref
 
 
 class ReplicaSet(NamedTuple):
@@ -47,9 +49,20 @@ def read_replica(rs: ReplicaSet, i) -> DagState:
     return jax.tree_util.tree_map(lambda x: x[i], rs.dags)
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _write_dags_donated(dags: DagState, i, dag: DagState) -> DagState:
+    return jax.tree_util.tree_map(lambda x, v: x.at[i].set(v), dags, dag)
+
+
 def write_replica(rs: ReplicaSet, i, dag: DagState) -> ReplicaSet:
-    dags = jax.tree_util.tree_map(lambda x, v: x.at[i].set(v), rs.dags, dag)
-    return rs._replace(dags=dags)
+    """Write replica ``i``'s rows in place.
+
+    The stacked ``dags`` buffers are DONATED to the update, so each commit
+    scatters one replica's rows into the existing allocation instead of
+    copying the whole (R, cap, ...) pytree — arrays reachable from the
+    ``rs`` passed in are invalid afterwards; use the returned set.
+    """
+    return rs._replace(dags=_write_dags_donated(rs.dags, i, dag))
 
 
 def global_row(dag: DagState, seq):
@@ -93,16 +106,19 @@ def merge_all(dags: DagState) -> DagState:
     Merge is commutative/associative/idempotent, so the fold order is
     irrelevant; the union is what an omniscient observer (the paper's
     external agent E) would see, and equals the shared-ledger state when the
-    overlay is fully synchronized.
+    overlay is fully synchronized. Implemented as the same fused winner
+    reduction the anti-entropy round uses (one receiver hearing every
+    replica — the ``Rr=1`` case of ``kernels.ref.gossip_winner_ref``), which
+    is bitwise-equal to the sequential fold: the reduction's replica-0 tie
+    preference is exactly the fold's first-element preference.
     """
-    first = jax.tree_util.tree_map(lambda x: x[0], dags)
-    rest = jax.tree_util.tree_map(lambda x: x[1:], dags)
-
-    def body(carry, one):
-        return dag_lib.merge(carry, one), None
-
-    out, _ = jax.lax.scan(body, first, rest)
-    return out
+    r = dags.publisher.shape[0]
+    mask = jnp.ones((1, r), bool)
+    src, ac = kernel_ref.gossip_winner_ref(
+        dags.publish_time, dags.publisher, dags.approval_count, mask
+    )
+    merged = dag_lib.merge_select(dags, src, ac, mask=mask)
+    return jax.tree_util.tree_map(lambda x: x[0], merged)
 
 
 def missing_vs_union(dags: DagState, union: DagState = None) -> jnp.ndarray:
@@ -124,3 +140,10 @@ def replicas_synced(dags: DagState) -> jnp.ndarray:
         jnp.all(x == x[0:1]) for x in jax.tree_util.tree_leaves(dags)
     ]
     return jnp.all(jnp.stack(flags))
+
+
+# Module-level jitted entry points: one trace per leaf structure/shape, no
+# matter how many GossipNetwork instances a benchmark sweep constructs.
+merge_all_jit = jax.jit(merge_all)
+missing_vs_union_jit = jax.jit(missing_vs_union)
+replicas_synced_jit = jax.jit(replicas_synced)

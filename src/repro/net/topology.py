@@ -9,7 +9,7 @@ jitted gossip kernels lift them to device once):
 
 Latency and drop are drawn per *link* (symmetric), so a slow or lossy edge
 is slow in both directions — message loss itself is still sampled per
-directed message (see ``gossip.make_edge_sampler``).
+directed message (see ``gossip._sample_edges``).
 """
 from __future__ import annotations
 

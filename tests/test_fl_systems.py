@@ -40,23 +40,48 @@ def test_gossip_registered_in_systems():
     assert SYSTEMS["dagfl_gossip"] is run_dagfl_gossip
 
 
-def test_gossip_ideal_wire_recovers_shared_ledger():
-    """sync period -> 0, drop 0, connected overlay: the gossip system's
-    accuracy curve must match run_dagfl within noise (here: exactly, same
-    RNG streams + deterministic CPU ops)."""
+@pytest.fixture(scope="module")
+def ideal_wire_base():
     n, dcfg = 12, default_dagfl_config(num_nodes=12)
     sim = SimConfig(iterations=40, eval_every=10, seed=0)
     task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=0)
-    base = run_dagfl(task, nodes, dcfg, sim, gval)
+    return run_dagfl(task, nodes, dcfg, sim, gval)
+
+
+@pytest.mark.parametrize("impl", ["fused", "scan"])
+def test_gossip_ideal_wire_recovers_shared_ledger(ideal_wire_base, impl):
+    """sync period -> 0, drop 0, connected overlay: the gossip system's
+    accuracy curve must match run_dagfl within noise (here: exactly, same
+    RNG streams + deterministic CPU ops) — under both the reference scan
+    round and the fused kernel round."""
+    n, dcfg = 12, default_dagfl_config(num_nodes=12)
+    sim = SimConfig(iterations=40, eval_every=10, seed=0)
+    base = ideal_wire_base
     task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=0)   # fresh node RNGs
     ideal = run_dagfl_gossip(
         task, nodes, dcfg, sim, gval,
-        topology=topo.full(n), gossip=GossipConfig(sync_period=0.0, seed=0),
+        topology=topo.full(n),
+        gossip=GossipConfig(sync_period=0.0, seed=0, impl=impl),
     )
     np.testing.assert_allclose(ideal.accs, base.accs, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(ideal.times, base.times, rtol=1e-9)
     # serialized commits: no duplicate-approval deficit in the ideal limit
     assert ideal.extras["approvals_issued"] == ideal.extras["approvals_in_union"]
+
+
+@pytest.mark.parametrize("runner", [run_dagfl, run_dagfl_gossip])
+def test_zero_iteration_run_returns_empty_curve(runner):
+    """Regression: iterations=0 used to crash on the trailing eval (its
+    completion time never got bound); now it returns an empty-curve result."""
+    n = 6
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=0)
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=0, eval_every=10, seed=0)
+    res = runner(task, nodes, dcfg, sim, gval)
+    assert len(res.iters) == len(res.times) == len(res.accs) == 0
+    assert res.avg_latency == 0.0
+    assert res.acc_at(100) == 0.0
+    assert len(res.extras["behaviors"]) == n
 
 
 def test_gossip_stale_overlay_diverges_and_reports_metrics():

@@ -1,7 +1,13 @@
-"""Anti-entropy gossip: propagation, loss, latency strides, partition/heal."""
+"""Anti-entropy gossip: propagation, loss, latency strides, partition/heal.
+
+Propagation-semantics tests run under both round implementations —
+``impl="scan"`` (the PR-1 reference fold) and ``impl="fused"`` (the kernel
+reduction fast path) — they must be indistinguishable.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import dag as dag_lib
 from repro.net import gossip as gossip_lib
@@ -20,11 +26,14 @@ def genesis(num_nodes):
     )
 
 
-def make_net(top, sync_period=1.0, partition=None, seed=0):
+IMPLS = ["fused", "scan"]
+
+
+def make_net(top, sync_period=1.0, partition=None, seed=0, impl="fused"):
     n = top.num_nodes
     return gossip_lib.GossipNetwork(
         genesis(n), bank=jnp.zeros((CAP, 4)), top=top,
-        cfg=gossip_lib.GossipConfig(sync_period=sync_period, seed=seed),
+        cfg=gossip_lib.GossipConfig(sync_period=sync_period, seed=seed, impl=impl),
         partition=partition,
     )
 
@@ -51,8 +60,9 @@ def test_replica_roundtrip_and_shared_start():
     assert int(net.read(0).count) == 1          # others unaffected until sync
 
 
-def test_ring_propagates_one_hop_per_tick():
-    net = make_net(topo.ring(6))
+@pytest.mark.parametrize("impl", IMPLS)
+def test_ring_propagates_one_hop_per_tick(impl):
+    net = make_net(topo.ring(6), impl=impl)
     publish_on(net, 0, seq=1, t=0.5)
     assert (net.missing_rows() > 0).sum() == 5
     net.advance(1.0)                             # neighbors 1 and 5 learn
@@ -63,17 +73,19 @@ def test_ring_propagates_one_hop_per_tick():
     assert net.synced()
 
 
-def test_full_drop_blocks_everything():
-    net = make_net(topo.ring(6, drop=1.0))
+@pytest.mark.parametrize("impl", IMPLS)
+def test_full_drop_blocks_everything(impl):
+    net = make_net(topo.ring(6, drop=1.0), impl=impl)
     publish_on(net, 0, seq=1, t=0.5)
     net.advance(10.0)
     assert (net.missing_rows() > 0).sum() == 5
     assert not net.synced()
 
 
-def test_latency_stride_halves_sync_rate():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_latency_stride_halves_sync_rate(impl):
     # link latency 2x the period: links fire only on even ticks
-    net = make_net(topo.ring(6, link_latency=2.0), sync_period=1.0)
+    net = make_net(topo.ring(6, link_latency=2.0), sync_period=1.0, impl=impl)
     publish_on(net, 0, seq=1, t=0.1)
     net.advance(1.0)                             # tick 0 fires (0 % 2 == 0)
     assert (net.missing_rows() > 0).sum() == 3
@@ -83,11 +95,12 @@ def test_latency_stride_halves_sync_rate():
     assert (net.missing_rows() > 0).sum() == 1
 
 
-def test_gossip_round_is_single_jitted_call():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_gossip_round_is_single_jitted_call(impl):
     """The round must accept the whole stacked replica set in one call."""
-    net = make_net(topo.full(8))
+    net = make_net(topo.full(8), impl=impl)
     publish_on(net, 2, seq=1, t=0.5)
-    round_fn = gossip_lib.make_gossip_round()
+    round_fn = gossip_lib.make_gossip_round(impl)
     edges = jnp.asarray(net.topology.adjacency)
     out = round_fn(net.replicas.dags, edges)     # (R, ...) in, (R, ...) out
     assert out.publisher.shape == net.replicas.dags.publisher.shape
@@ -104,14 +117,15 @@ def test_union_view_counts():
     assert int(union.approval_count[0]) == 1     # node 2's credit survives union
 
 
-def test_partition_then_heal_converges_identically():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_partition_then_heal_converges_identically(impl):
     """Acceptance: split for [t_a, t_b), publish on both sides, heal -> all
     replicas converge to the identical DagState."""
     n = 8
     part = gossip_lib.PartitionSchedule(
         assignment=topo.split_halves(n), t_start=1.5, t_end=6.5,
     )
-    net = make_net(topo.full(n), sync_period=1.0, partition=part)
+    net = make_net(topo.full(n), sync_period=1.0, partition=part, impl=impl)
 
     publish_on(net, 0, seq=1, t=0.2)             # pre-partition: reaches all
     net.advance(1.0)
@@ -142,25 +156,28 @@ def test_partition_then_heal_converges_identically():
     assert int(union.approval_count[1]) == 1
 
 
-def test_ideal_wire_ignores_link_latency():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_ideal_wire_ignores_link_latency(impl):
     """sync_period <= 0 is an ideal wire: latency strides must not apply
     (regression: ceil(latency/1e-9) overflowed int32 and disabled gossip)."""
-    net = make_net(topo.ring(6, link_latency=2.5), sync_period=0.0)
+    net = make_net(topo.ring(6, link_latency=2.5), sync_period=0.0, impl=impl)
     publish_on(net, 0, seq=1, t=0.5)
     net.advance(1.0)
     assert net.synced()
 
 
-def test_converge_covers_strided_links():
+@pytest.mark.parametrize("impl", IMPLS)
+def test_converge_covers_strided_links(impl):
     """converge()'s tick bound must account for links that only fire every
     ceil(latency/period) ticks (regression: bound was num_nodes alone)."""
-    net = make_net(topo.ring(8, link_latency=3.0), sync_period=1.0)
+    net = make_net(topo.ring(8, link_latency=3.0), sync_period=1.0, impl=impl)
     publish_on(net, 0, seq=1, t=0.1)
     assert net.converge(at_time=100.0)
     assert net.synced()
 
 
-def test_disconnected_overlay_never_converges():
-    net = make_net(topo.erdos_renyi(6, 0.0))     # no links at all
+@pytest.mark.parametrize("impl", IMPLS)
+def test_disconnected_overlay_never_converges(impl):
+    net = make_net(topo.erdos_renyi(6, 0.0), impl=impl)     # no links at all
     publish_on(net, 0, seq=1, t=0.1)
     assert not net.converge(at_time=5.0)
