@@ -35,6 +35,7 @@ from repro.core import dag as dag_lib
 from repro.fl.experiments import default_dagfl_config, make_cnn_setup
 from repro.fl.systems import SimConfig, run_dagfl, run_dagfl_gossip
 from repro.net import gossip as gossip_lib
+from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
 
@@ -123,6 +124,52 @@ def run_sync_round_grid(
     return rows
 
 
+def run_sharded_sync(
+    n: int = 48, cap: int = 128, reps: int = 10, seed: int = 0,
+    record: dict = None,
+):
+    """Mesh-sharded round vs the single-device fused round.
+
+    When >1 device is visible (the CI 8-device lane forces eight host CPU
+    devices), runs the fused round with the ReplicaSet receiver axis sharded
+    over every viable ("nodes", "model") mesh and asserts BITWISE equality
+    with the single-device fused output; wall times land next to the
+    single-device number in ``BENCH_gossip_sync.json``. Single-device runs
+    record a skip marker so the JSON says why the entry is absent.
+    """
+    d = jax.device_count()
+    rows = []
+    if d < 2:
+        if record is not None:
+            record["sharded_sync"] = dict(skipped=f"{d} device(s) visible")
+        return rows
+    shapes = [(d, 1)]
+    if d > 2 and d % 2 == 0:
+        shapes.append((2, d // 2))
+    top = topo.k_regular(n, 4, seed=seed)
+    edges = jnp.asarray(top.adjacency)
+    rs = _half_full_replicas(n, cap, seed)
+    fused = gossip_lib.make_gossip_round("fused")
+    base = fused(rs.dags, edges)
+    base_us = _time_round(fused, rs.dags, edges, reps) * 1e6
+    for nodes, model in shapes:
+        mesh = mesh_lib.make_gossip_mesh(nodes=nodes, model=model)
+        fn = gossip_lib.make_gossip_round("fused", mesh=mesh)
+        equivalent = bool(gossip_lib.trees_equal_jit(fn(rs.dags, edges), base))
+        per_us = _time_round(fn, rs.dags, edges, reps) * 1e6
+        emit(
+            f"gossip/sharded_round/{nodes}x{model}/n{n}_cap{cap}", per_us,
+            f"bitwise_equal_fused={equivalent};single_device_us={base_us:.1f}",
+        )
+        rows.append(dict(
+            mesh=f"{nodes}x{model}", n=n, cap=cap, us_per_call=per_us,
+            single_device_us=base_us, bitwise_equal_fused=equivalent,
+        ))
+    if record is not None:
+        record["sharded_sync"] = rows
+    return rows
+
+
 def run_dispatch_batching(
     iterations: int = 150, num_nodes: int = 25, seed: int = 0, record: dict = None,
 ):
@@ -175,6 +222,7 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
+    run_sharded_sync(record=record)
     run_dispatch_batching(record=record)
     if own:
         write_bench_json(record, json_path)
@@ -252,11 +300,18 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
 
 
 def smoke(json_path: str = JSON_PATH) -> int:
-    """CI tripwire: reduced grid; fail on lost equivalence or < 2x speedup."""
+    """CI tripwire: reduced grid; fail on lost scan/fused equivalence, a
+    < 2x speedup, or (when >1 device is visible — the 8-device CI lane) a
+    mesh-sharded round that diverges from the single-device fused round.
+
+    N=48 so the same grid point serves the sharded check (48 tiles over
+    both the 8x1 and 2x4 meshes the acceptance pins).
+    """
     record = {"mode": "smoke"}
     rows = run_sync_round_grid(
-        ns=(50,), caps=(128,), reps=10, record=record,
+        ns=(48,), caps=(128,), reps=10, record=record,
     )
+    sharded_rows = run_sharded_sync(reps=5, record=record)
     write_bench_json(record, json_path)
     ok = True
     for row in rows:
@@ -266,6 +321,13 @@ def smoke(json_path: str = JSON_PATH) -> int:
         if row.get("speedup_vs_scan", float("inf")) < 2.0:
             print(f"# SMOKE FAIL: fused speedup below 2x: {row}")
             ok = False
+    for row in sharded_rows:
+        if not row["bitwise_equal_fused"]:
+            print(f"# SMOKE FAIL: mesh-sharded round diverged from fused: {row}")
+            ok = False
+    if jax.device_count() > 1 and not sharded_rows:
+        print("# SMOKE FAIL: multi-device backend but no sharded rows recorded")
+        ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1
 

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    python -m benchmarks.run [--quick] [--only NAME]
 
 Emits ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
 Scale note: the simulation benches run the paper's experiments at bench

@@ -1,6 +1,6 @@
 """Anomaly detection demo: 20% poisoning nodes vs DAG-FL's consensus.
 
-    PYTHONPATH=src python examples/federated_anomaly.py
+    python examples/federated_anomaly.py
 
 Reproduces the Table-IV mechanism live: poisoned transactions get isolated
 (low approval counts) and their publishers' contribution rates collapse,

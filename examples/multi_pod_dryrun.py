@@ -1,6 +1,6 @@
 """Launch-script example: the multi-pod dry-run for one (arch x shape).
 
-    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch olmo-1b \
+    python examples/multi_pod_dryrun.py --arch olmo-1b \
         --shape train_4k --mesh both
 
 Thin wrapper over ``repro.launch.dryrun`` (which must own the process:

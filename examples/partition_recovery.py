@@ -1,6 +1,6 @@
 """Partition/heal walkthrough: §III.A's per-node DAGs under a network split.
 
-    PYTHONPATH=src python examples/partition_recovery.py [--nodes 12]
+    python examples/partition_recovery.py [--nodes 12]
 
 Each node runs Algorithm 2 against its OWN DAG replica on a ring overlay
 (repro.net). Mid-run the overlay is partitioned into two halves: the sides

@@ -1,6 +1,6 @@
 """Quickstart: DAG-FL federating the paper's CNN task on synthetic MNIST.
 
-    PYTHONPATH=src python examples/quickstart.py [--iterations 150]
+    python examples/quickstart.py [--iterations 150]
 
 Shows the whole public API surface: config -> data partition -> controller
 genesis (Algorithm 1) -> per-node consensus iterations (Algorithm 2) ->

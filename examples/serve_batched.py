@@ -1,6 +1,6 @@
 """Batched serving demo: prefill + streaming decode on a reduced arch.
 
-    PYTHONPATH=src python examples/serve_batched.py --arch gemma-2b --tokens 16
+    python examples/serve_batched.py --arch gemma-2b --tokens 16
 
 Builds the KV cache for a batch of prompts (prefill path, chunked attention)
 then greedily decodes N tokens per request with the single-token decode step

@@ -1,6 +1,6 @@
 """§V.B testbed analogue: 5 worker nodes + a host controller (Fig. 12/13).
 
-    PYTHONPATH=src python examples/testbed_five_nodes.py
+    python examples/testbed_five_nodes.py
 
 The paper deploys 5 Alibaba-cloud nodes + a host running DAG-FL Controlling;
 here the 5 nodes are processes-in-one (the event loop serializes their

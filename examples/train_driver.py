@@ -1,6 +1,6 @@
 """End-to-end driver: DAG-FL-train a ~100M-param LM for a few hundred steps.
 
-    PYTHONPATH=src python examples/train_driver.py [--steps 200]
+    python examples/train_driver.py [--steps 200]
 
 Uses the SAME jitted ``dagfl_train_step`` that the multi-pod dry-run lowers
 on the 2x16x16 mesh — here it runs on the host CPU with 4 federated nodes

@@ -325,9 +325,9 @@ class _GossipLedger:
 
     name = "dagfl_gossip"
 
-    def __init__(self, state, topology, gossip, partition):
+    def __init__(self, state, topology, gossip, partition, mesh=None):
         self.net = gossip_lib.GossipNetwork(
-            state.dag, state.bank, topology, gossip, partition
+            state.dag, state.bank, topology, gossip, partition, mesh=mesh
         )
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
         self._commit = _jit_of(_gossip_commit)
@@ -390,6 +390,7 @@ def run_dagfl_gossip(
     topology: Optional[topo_lib.Topology] = None,
     gossip: Optional[gossip_lib.GossipConfig] = None,
     partition: Optional[gossip_lib.PartitionSchedule] = None,
+    mesh=None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -401,6 +402,9 @@ def run_dagfl_gossip(
     exactly to ``run_dagfl``; with finite sync periods, losses, or a
     partition schedule, tip staleness, duplicate approvals across stale
     views, and partition/heal convergence become measurable in ``extras``.
+    ``mesh`` (repro.net.mesh) shards the replica set's receiver axis over
+    the mesh's "nodes" axis — bitwise the same simulation, run across
+    devices.
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
@@ -408,7 +412,9 @@ def run_dagfl_gossip(
         gossip = gossip_lib.GossipConfig(sync_period=1.0, seed=sim.seed)
     return _run_dagfl_events(
         task, nodes, dcfg, sim, global_val, weighted,
-        lambda state, commit_fn: _GossipLedger(state, topology, gossip, partition),
+        lambda state, commit_fn: _GossipLedger(
+            state, topology, gossip, partition, mesh=mesh
+        ),
     )
 
 

@@ -51,11 +51,13 @@ from repro.kernels import ref
 BLOCK_C = 256   # (R, 256) i32/f32 slabs x 4 inputs: ~400 KiB VMEM @ R=100
 
 
-def _winner_kernel(mask_ref, t_ref, p_ref, ac_ref, src_ref, ac_out_ref):
-    # mask_ref: (R, 1) i32 — receiver i's candidate column (diag included)
+def _winner_kernel(off_ref, mask_ref, t_ref, p_ref, ac_ref, src_ref, ac_out_ref):
+    # off_ref: (1, 1) i32 — global sender index of the block's receiver 0
+    # mask_ref: (R, 1) i32 — receiver i's candidate column (self included)
     # t_ref/p_ref/ac_ref: (R, bc) — all senders' key/counter slabs
     # src_ref/ac_out_ref: (1, bc) — winner index + merged counter for row i
     i = pl.program_id(0)
+    gid = i + off_ref[0, 0]                                  # global receiver id
     r = t_ref.shape[0]
     m = mask_ref[...] != 0                                   # (R, 1)
     p = p_ref[...]
@@ -68,8 +70,8 @@ def _winner_kernel(mask_ref, t_ref, p_ref, ac_ref, src_ref, ac_out_ref):
     win = tie & (pm == best_p)                               # winning identity
     idx = jax.lax.broadcasted_iota(jnp.int32, win.shape, 0)
     first = jnp.min(jnp.where(win, idx, r), axis=0, keepdims=True)
-    self_win = jnp.any(win & (idx == i), axis=0, keepdims=True)
-    src = jnp.where(self_win | (first >= r), i, first)       # first>=r: all empty
+    self_win = jnp.any(win & (idx == gid), axis=0, keepdims=True)
+    src = jnp.where(self_win | (first >= r), gid, first)     # first>=r: all empty
     src_ref[...] = src.astype(jnp.int32)
     ac_out_ref[...] = jnp.max(jnp.where(win, ac_ref[...], 0), axis=0, keepdims=True)
 
@@ -79,25 +81,37 @@ def gossip_winner_pallas(
     publish_time: jnp.ndarray,    # (R, cap) f32
     publisher: jnp.ndarray,       # (R, cap) i32
     approval_count: jnp.ndarray,  # (R, cap) i32
-    mask: jnp.ndarray,            # (R, R) bool — mask[i, j]: i hears j (diag True)
+    mask: jnp.ndarray,            # (Rr, R) bool — mask[i, j]: i hears j
     block_c: int = BLOCK_C,
     interpret: bool = True,
+    row_offset=0,                 # () i32 — global sender index of receiver 0
 ) -> tuple:
-    """(src, ac): per-row winner index and merged approval counter."""
+    """(src, ac): per-row winner index and merged approval counter.
+
+    ``mask`` may be a rectangular receiver block: a mesh shard
+    (``repro.net.mesh``) computes its R/shards receivers against the
+    all-gathered sender axis, passing the block's global start index as
+    ``row_offset`` so self-tie-preference and the all-empty fallback keep
+    addressing the receiver's own global row.
+    """
     r, c = publish_time.shape
+    rr = mask.shape[0]
     bc = min(block_c, c) if c else block_c
     pad = (-c) % bc
     t = jnp.pad(publish_time, ((0, 0), (0, pad)))
     p = jnp.pad(publisher, ((0, 0), (0, pad)), constant_values=-1)
     ac = jnp.pad(approval_count, ((0, 0), (0, pad)))
+    off = jnp.asarray(row_offset, jnp.int32)
     # the receiver is always a candidate (see ref.gossip_winner_ref)
-    mask = mask | jnp.eye(r, dtype=bool)
+    rows = jnp.arange(rr, dtype=jnp.int32)
+    mask = jnp.asarray(mask).at[rows, off + rows].set(True)
     mask_t = mask.astype(jnp.int32).T                        # column i = receiver i
 
     src, ac_out = pl.pallas_call(
         _winner_kernel,
-        grid=(r, (c + pad) // bc),
+        grid=(rr, (c + pad) // bc),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i, cb: (0, 0)),
             pl.BlockSpec((r, 1), lambda i, cb: (0, i)),
             pl.BlockSpec((r, bc), lambda i, cb: (0, cb)),
             pl.BlockSpec((r, bc), lambda i, cb: (0, cb)),
@@ -108,11 +122,11 @@ def gossip_winner_pallas(
             pl.BlockSpec((1, bc), lambda i, cb: (i, cb)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, c + pad), jnp.int32),
-            jax.ShapeDtypeStruct((r, c + pad), jnp.int32),
+            jax.ShapeDtypeStruct((rr, c + pad), jnp.int32),
+            jax.ShapeDtypeStruct((rr, c + pad), jnp.int32),
         ],
         interpret=interpret,
-    )(mask_t, t, p, ac)
+    )(off.reshape(1, 1), mask_t, t, p, ac)
     return src[:, :c], ac_out[:, :c]
 
 
@@ -120,8 +134,9 @@ def gossip_winner_nbr(
     publish_time: jnp.ndarray,    # (R, cap) f32
     publisher: jnp.ndarray,       # (R, cap) i32
     approval_count: jnp.ndarray,  # (R, cap) i32
-    nbr_idx: jnp.ndarray,         # (R, D) i32 candidate sender lists
-    nbr_act: jnp.ndarray,         # (R, D) bool candidate activity
+    nbr_idx: jnp.ndarray,         # (Rr, D) i32 candidate sender lists
+    nbr_act: jnp.ndarray,         # (Rr, D) bool candidate activity
+    row_ids: jnp.ndarray = None,  # (Rr,) i32 global sender index per receiver
 ) -> tuple:
     """Degree-compressed winner selection — the CPU/sparse-overlay fast path.
 
@@ -131,28 +146,36 @@ def gossip_winner_nbr(
     what makes the fused round beat the sequential fold on sparse overlays
     even on a single CPU core. ``nbr_idx`` rows may contain duplicates
     (padding); a receiver that should be its own candidate (always, in
-    gossip) must appear in its list with ``nbr_act`` true. Equivalence with
-    the dense oracle is property-tested.
+    gossip) must appear in its list with ``nbr_act`` true. ``row_ids`` maps
+    a rectangular receiver block to its global sender indices (a mesh shard
+    reduces its own receivers against the gathered sender axis; None means
+    receiver i is sender i). Equivalence with the dense oracle is
+    property-tested.
     """
     r = publish_time.shape[0]
-    t = publish_time[nbr_idx]                                # (R, D, cap)
+    t = publish_time[nbr_idx]                                # (Rr, D, cap)
     p = publisher[nbr_idx]
     a = approval_count[nbr_idx]
     valid = nbr_act[:, :, None] & (p >= 0)
     tm = jnp.where(valid, t, -jnp.inf)
-    best_t = jnp.max(tm, axis=1)                             # (R, cap)
+    best_t = jnp.max(tm, axis=1)                             # (Rr, cap)
     tie = valid & (tm == best_t[:, None])
     pm = jnp.where(tie, p, jnp.iinfo(jnp.int32).min)
     best_p = jnp.max(pm, axis=1)
     win = tie & (pm == best_p[:, None])
     first = jnp.min(jnp.where(win, nbr_idx[:, :, None], r), axis=1)
-    rows = jnp.arange(r, dtype=jnp.int32)[:, None]
+    if row_ids is None:
+        rows = jnp.arange(nbr_idx.shape[0], dtype=jnp.int32)[:, None]
+        own_time, own_pub = publish_time, publisher
+    else:
+        rows = jnp.asarray(row_ids, jnp.int32)[:, None]
+        own_time, own_pub = publish_time[rows[:, 0]], publisher[rows[:, 0]]
     self_act = jnp.any(nbr_act & (nbr_idx == rows), axis=1)
     self_win = (
         self_act[:, None]
-        & (publisher >= 0)
-        & (publish_time == best_t)
-        & (publisher == best_p)
+        & (own_pub >= 0)
+        & (own_time == best_t)
+        & (own_pub == best_p)
     )
     src = jnp.where(self_win | (first >= r), rows, first)
     ac = jnp.max(jnp.where(win, a, 0), axis=1)
@@ -162,18 +185,26 @@ def gossip_winner_nbr(
 def gossip_winner(
     publish_time, publisher, approval_count, mask,
     impl: str = None, block_c: int = BLOCK_C, interpret: bool = None,
+    row_offset=None,
 ):
     """Winner-selection reduction with backend dispatch.
 
     ``impl``: "pallas" forces the kernel (interpreted off-TPU), "lax" the
     pure-lax fallback; None picks pallas on TPU, lax elsewhere (the Pallas
     interpreter's per-grid-step loop is slower than one fused lax reduction
-    on CPU).
+    on CPU). ``row_offset`` (() i32) marks ``mask`` as a contiguous receiver
+    block starting at that global sender index — the mesh-sharded round.
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "lax"
     if impl == "lax":
-        return ref.gossip_winner_ref(publish_time, publisher, approval_count, mask)
+        row_ids = None
+        if row_offset is not None:
+            rr = mask.shape[0]
+            row_ids = jnp.asarray(row_offset, jnp.int32) + jnp.arange(rr, dtype=jnp.int32)
+        return ref.gossip_winner_ref(
+            publish_time, publisher, approval_count, mask, row_ids=row_ids
+        )
     if impl != "pallas":
         raise ValueError(f"unknown gossip_winner impl: {impl!r}")
     if interpret is None:
@@ -181,4 +212,5 @@ def gossip_winner(
     return gossip_winner_pallas(
         publish_time, publisher, approval_count, mask,
         block_c=block_c, interpret=interpret,
+        row_offset=0 if row_offset is None else row_offset,
     )

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
-from repro.kernels.gossip_merge import gossip_winner
+from repro.kernels.gossip_merge import gossip_winner, gossip_winner_nbr
 from repro.kernels.model_distance import model_distance_pallas
 from repro.kernels.wkv import wkv_pallas
 from repro.kernels import ref
@@ -52,5 +52,5 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
 
 __all__ = [
     "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
-    "gossip_winner", "ref",
+    "gossip_winner", "gossip_winner_nbr", "ref",
 ]

@@ -12,12 +12,14 @@ def gossip_winner_ref(
     publisher: jnp.ndarray,       # (R, cap) i32, -1 = empty row
     approval_count: jnp.ndarray,  # (R, cap) i32
     mask: jnp.ndarray,            # (Rr, R) bool — receiver i hears sender j
+    row_ids: jnp.ndarray = None,  # (Rr,) i32 — global sender index of each
+                                  # receiver (None: receiver i IS sender i)
 ):
     """Per-row gossip-merge winner selection (oracle + CPU fast path).
 
-    For each receiver i (row of ``mask``; the diagonal entry marks the
-    receiver's own replica as a candidate) and ledger row r, the winner is
-    the occupied candidate with the lexicographically largest
+    For each receiver i (row of ``mask``; the entry at the receiver's own
+    sender index marks its local replica as a candidate) and ledger row r,
+    the winner is the occupied candidate with the lexicographically largest
     ``(publish_time, publisher)`` key; the merged ``approval_count`` is the
     max over candidates holding that identity (CRDT union-by-max, see
     ``repro.core.dag.merge``). Key ties prefer the receiver itself, then the
@@ -25,13 +27,19 @@ def gossip_winner_ref(
     the reduction is bitwise-faithful to it.
 
     Returns (src (Rr, cap) i32 winner indices, ac (Rr, cap) i32 counters).
-    ``mask`` may be rectangular: ``merge_all``'s union fold is the Rr=1 case.
+    ``mask`` may be rectangular: ``merge_all``'s union fold is the Rr=1
+    case, and a mesh shard (``repro.net.mesh``) passes its receiver block's
+    global indices via ``row_ids`` (receiver i of the block is sender
+    ``row_ids[i]`` of the gathered axis).
     """
+    mask = jnp.asarray(mask)
     rr, r = mask.shape
+    rows = jnp.arange(rr, dtype=jnp.int32)
+    recv = rows if row_ids is None else jnp.asarray(row_ids, jnp.int32)
     # the receiver is ALWAYS a candidate (the sequential fold starts from the
-    # local replica) — force the diagonal so a mask built from a zero-diagonal
-    # adjacency cannot zero an occupied local row's counter
-    mask = mask | jnp.eye(rr, r, dtype=bool)
+    # local replica) — force its own entry so a mask built from a
+    # zero-diagonal adjacency cannot zero an occupied local row's counter
+    mask = mask.at[rows, recv].set(True)
     occ = publisher >= 0
     valid = mask[:, :, None] & occ[None]                      # (Rr, R, cap)
     tm = jnp.where(valid, publish_time[None], -jnp.inf)
@@ -42,15 +50,14 @@ def gossip_winner_ref(
     win = tie & (pm == best_p[:, None])                       # winning identity
     idx = jnp.arange(r, dtype=jnp.int32)[None, :, None]
     first = jnp.min(jnp.where(win, idx, r), axis=1)           # (Rr, cap)
-    rows = jnp.arange(rr, dtype=jnp.int32)
-    # receiver i's own replica is sender i; it wins ties iff it holds the key
+    # the receiver's own replica is sender recv[i]; it wins ties iff it
+    # holds the key
     self_win = (
-        mask[rows, rows][:, None]
-        & occ[:rr]
-        & (publish_time[:rr] == best_t)
-        & (publisher[:rr] == best_p)
+        occ[recv]
+        & (publish_time[recv] == best_t)
+        & (publisher[recv] == best_p)
     )
-    src = jnp.where(self_win | (first >= r), rows[:, None], first)
+    src = jnp.where(self_win | (first >= r), recv[:, None], first)
     ac = jnp.max(jnp.where(win, approval_count[None], 0), axis=1)
     return src.astype(jnp.int32), ac.astype(jnp.int32)
 

@@ -9,8 +9,8 @@ mesh, print memory/cost analysis, and emit the roofline terms.
 MUST be run as a module entry point (device count is locked at first jax
 init, hence the XLA_FLAGS lines above before any other import):
 
-    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
-    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --csv out.csv
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --csv out.csv
 """
 import argparse
 import json

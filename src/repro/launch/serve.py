@@ -1,6 +1,6 @@
 """Serving launcher: continuous-batching-lite over the prefill/decode paths.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+    python -m repro.launch.serve --arch gemma-2b --reduced \
         --requests 8 --max-new 16
 
 A fixed-size slot pool holds per-request decode state; arriving requests are

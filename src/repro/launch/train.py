@@ -1,6 +1,6 @@
 """DAG-FL training driver — the end-to-end production path.
 
-    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+    python -m repro.launch.train --arch qwen3-0.6b --reduced \
         --steps 50 --nodes 4
 
 Runs the jitted ``dagfl_train_step`` (selection -> Eq.-1 aggregation ->

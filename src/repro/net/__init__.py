@@ -27,6 +27,12 @@ supplies the missing network layer:
                 advance window into ONE jitted ``lax.scan`` and runs
                 ``converge`` as ONE jitted ``lax.while_loop``.
 
+  ``mesh``      device-mesh placement: partitions the ``ReplicaSet``'s
+                leading receiver axis over a mesh's "nodes" axis, turning
+                the fused round into a per-shard reduction plus one
+                collective gather of sender rows (``shard_map`` body in
+                ``gossip``) — bitwise-equal to the single-device round.
+
 Data flow: ``topology`` builds the overlay → ``replica`` stacks the
 per-node ledgers → ``gossip`` moves rows between them → ``repro.fl.systems.
 run_dagfl_gossip`` interleaves sync ticks with Algorithm-2 prepare/commit
@@ -34,13 +40,14 @@ events so tip staleness, duplicate approvals across stale views, and
 partition/heal convergence become measurable against the shared-ledger
 baseline.
 """
-from repro.net import gossip, replica, topology
+from repro.net import gossip, mesh, replica, topology
 from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
+from repro.net.mesh import make_gossip_mesh
 from repro.net.replica import ReplicaSet
 from repro.net.topology import Topology
 
 __all__ = [
-    "gossip", "replica", "topology",
+    "gossip", "mesh", "replica", "topology",
     "GossipConfig", "GossipNetwork", "PartitionSchedule",
-    "ReplicaSet", "Topology",
+    "ReplicaSet", "Topology", "make_gossip_mesh",
 ]

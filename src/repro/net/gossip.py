@@ -33,10 +33,20 @@ Per-edge behavior (unchanged semantics):
   partitions     a ``PartitionSchedule`` suppresses cross-component edges
                  for t ∈ [t_start, t_end), then heals.
 
+Mesh sharding: constructed with ``mesh=...`` (see ``repro.net.mesh``),
+``GossipNetwork`` partitions the replica set's leading receiver axis over
+the mesh's ``"nodes"`` axis and swaps the round body for a ``shard_map``:
+each shard all-gathers the sender rows once (the round's one collective),
+winner-reduces its own receiver block, and writes back only that block.
+The tick-batched ``advance`` scan and the ``converge`` while-loop stay
+device-resident and are traced once per (impl, mesh). ``mesh=None``
+preserves the single-device paths bitwise, and the sharded round is
+bitwise-equal to them (property-tested in ``tests/test_net_mesh.py``).
+
 ``GossipNetwork`` is the host-side driver the simulator talks to: it owns
 the replica set, the tick clock, and the schedule bookkeeping; all jitted
-entry points live at module level (cached per ``impl``), so constructing
-many networks in a benchmark sweep re-traces nothing.
+entry points live at module level (cached per ``impl`` x ``mesh``), so
+constructing many networks in a benchmark sweep re-traces nothing.
 """
 from __future__ import annotations
 
@@ -47,12 +57,15 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import dag as dag_lib
 from repro.core.dag import DagState
 from repro.kernels import gossip_merge as gossip_kernel
+from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
-from repro.net.topology import Topology, partition_matrix
+from repro.net.topology import Topology, neighbor_table, partition_matrix
 
 
 @dataclass(frozen=True)
@@ -123,35 +136,22 @@ def _sample_edges(key, tick, part_mask, adj, drop, stride):
     return live & (u >= drop)
 
 
-def _neighbor_table(adjacency: np.ndarray):
-    """Static per-receiver candidate lists from the overlay adjacency.
-
-    Returns ``(nbr_idx (R, D) int32, nbr_valid (R, D) bool)`` where D is the
-    max degree + 1: each row lists the receiver itself plus its neighbors,
-    padded (``nbr_valid`` false). Every sampled edge mask is a subset of the
-    adjacency, so the table is computed ONCE host-side and the per-tick
-    winner reduction runs over D candidates instead of all R senders —
-    O(R * D * cap) work, the term that makes the fused round beat the
-    sequential fold on sparse overlays.
-    """
-    adj = np.asarray(adjacency, bool)
-    r = adj.shape[0]
-    m = adj | np.eye(r, dtype=bool)
-    deg = int(m.sum(axis=1).max())
-    order = np.argsort(~m, axis=1, kind="stable")[:, :deg].astype(np.int32)
-    valid = np.take_along_axis(m, order, axis=1)
-    return order, valid
-
-
 @functools.lru_cache(maxsize=64)
 def _neighbor_table_cached(mask_bytes: bytes, r: int):
     m = np.frombuffer(mask_bytes, bool).reshape(r, r)
-    nbr_idx, nbr_valid = _neighbor_table(m)
+    nbr_idx, nbr_valid = neighbor_table(m)
     return jnp.asarray(nbr_idx), jnp.asarray(nbr_valid)
 
 
-def _round_scan(dags: DagState, edge_active: jnp.ndarray) -> DagState:
-    """PR-1 reference round: vmap over receivers of a scan over senders."""
+def _round_scan(
+    dags: DagState, edge_active: jnp.ndarray, senders: DagState = None
+) -> DagState:
+    """PR-1 reference round: vmap over receivers of a scan over senders.
+
+    ``senders`` defaults to ``dags``; a mesh shard passes its local receiver
+    block as ``dags`` and the all-gathered sender axis as ``senders``.
+    """
+    senders = dags if senders is None else senders
 
     def receive(dag_i, active_row):
         def body(carry, xs):
@@ -162,7 +162,7 @@ def _round_scan(dags: DagState, edge_active: jnp.ndarray) -> DagState:
             )
             return kept, None
 
-        out, _ = jax.lax.scan(body, dag_i, (dags, active_row))
+        out, _ = jax.lax.scan(body, dag_i, (senders, active_row))
         return out
 
     return jax.vmap(receive)(dags, edge_active)
@@ -171,6 +171,7 @@ def _round_scan(dags: DagState, edge_active: jnp.ndarray) -> DagState:
 def _round_fused(
     dags: DagState, edge_active: jnp.ndarray,
     nbr_idx: jnp.ndarray, nbr_valid: jnp.ndarray, impl: str,
+    senders: DagState = None, row_offset=None,
 ) -> DagState:
     """Fast path: one winner reduction + one payload gather per tick.
 
@@ -178,26 +179,38 @@ def _round_fused(
     grid (the TPU shape; interpreted elsewhere); "lax" — the default off-TPU
     — gathers each receiver's candidate list and reduces over the max degree
     instead of the whole sender axis.
+
+    THE round body, single-device and sharded alike: a mesh shard passes its
+    receiver block as ``dags`` with the all-gathered sender axis as
+    ``senders`` and the block's global start index as ``row_offset``
+    (``edge_active``/``nbr_idx``/``nbr_valid`` then hold just the block's
+    rows); the defaults are the identity block — every receiver, offset 0.
     """
     if impl == "fused":
         impl = "pallas" if jax.default_backend() == "tpu" else "lax"
-    n = edge_active.shape[0]
+    senders = dags if senders is None else senders
+    rb = dags.publisher.shape[0]
+    rows = jnp.arange(rb, dtype=jnp.int32)
+    if row_offset is not None:
+        rows = rows + row_offset
     if impl == "pallas":
-        mask = edge_active | jnp.eye(n, dtype=bool)  # the receiver is a candidate
+        # the receiver is a candidate
+        mask = jnp.asarray(edge_active).at[jnp.arange(rb), rows].set(True)
         src, ac = gossip_kernel.gossip_winner_pallas(
-            dags.publish_time, dags.publisher, dags.approval_count, mask,
-            interpret=jax.default_backend() != "tpu",
+            senders.publish_time, senders.publisher, senders.approval_count,
+            mask, interpret=jax.default_backend() != "tpu",
+            row_offset=0 if row_offset is None else row_offset,
         )
-        return dag_lib.merge_select(dags, src, ac, mask=mask)
+        return dag_lib.merge_select(senders, src, ac, mask=mask)
     if impl != "lax":
         raise ValueError(f"unknown gossip round impl: {impl!r}")
-    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
-    act = jnp.take_along_axis(edge_active, nbr_idx, axis=1) | (nbr_idx == rows)
+    act = jnp.take_along_axis(edge_active, nbr_idx, axis=1) | (nbr_idx == rows[:, None])
     act = act & nbr_valid
     src, ac = gossip_kernel.gossip_winner_nbr(
-        dags.publish_time, dags.publisher, dags.approval_count, nbr_idx, act
+        senders.publish_time, senders.publisher, senders.approval_count,
+        nbr_idx, act, row_ids=None if row_offset is None else rows,
     )
-    return dag_lib.merge_select(dags, src, ac, nbr_idx=nbr_idx, nbr_act=act)
+    return dag_lib.merge_select(senders, src, ac, nbr_idx=nbr_idx, nbr_act=act)
 
 
 def _apply_round(
@@ -214,7 +227,75 @@ def _round_jit(impl: str):
     return jax.jit(functools.partial(_apply_round, impl=impl))
 
 
-def make_gossip_round(impl: str = "fused"):
+# ---------------------------------------------------------------------------
+# Mesh-sharded round: per-shard winner reduction + one collective row gather
+# ---------------------------------------------------------------------------
+
+
+def _shard_round_block(
+    dags: DagState, edge_active: jnp.ndarray,
+    nbr_idx: jnp.ndarray, nbr_valid: jnp.ndarray, impl: str,
+) -> DagState:
+    """One shard's share of a sync tick (runs under ``shard_map``).
+
+    ``dags`` holds this shard's contiguous receiver block (R/shards rows of
+    the stacked replica set); ``edge_active`` and the candidate table arrive
+    replicated. The shard all-gathers the sender rows ONCE — the round's one
+    collective; merge payload rows are small next to the model bank, which
+    stays shared — then runs the SAME round body as the single-device path
+    (``_round_fused``/``_round_scan``) restricted to its own receiver block
+    (global ids ``off + arange``, so self-tie-preference and payload gathers
+    keep addressing the gathered sender axis), and returns only its block.
+    Bitwise-equal to the single-device round by construction: one shared
+    body, identical candidate lists, masks, and reduction arithmetic per
+    receiver row.
+    """
+    rb = dags.publisher.shape[0]
+    off = jax.lax.axis_index(mesh_lib.NODES_AXIS) * rb
+    senders = jax.tree_util.tree_map(
+        lambda x: jax.lax.all_gather(x, mesh_lib.NODES_AXIS, axis=0, tiled=True),
+        dags,
+    )
+    edges = jax.lax.dynamic_slice_in_dim(edge_active, off, rb, axis=0)
+    if impl == "scan":
+        return _round_scan(dags, edges, senders=senders)
+    nbr = jax.lax.dynamic_slice_in_dim(nbr_idx, off, rb, axis=0)
+    nbrv = jax.lax.dynamic_slice_in_dim(nbr_valid, off, rb, axis=0)
+    return _round_fused(
+        dags, edges, nbr, nbrv, impl, senders=senders, row_offset=off
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _shard_round(impl: str, mesh):
+    """shard_map'd round: receivers split over "nodes", everything else
+    replicated (any extra mesh axes — e.g. "model" — replicate too)."""
+    return shard_map(
+        functools.partial(_shard_round_block, impl=impl),
+        mesh=mesh,
+        in_specs=(P(mesh_lib.NODES_AXIS), P(), P(), P()),
+        out_specs=P(mesh_lib.NODES_AXIS),
+        check_rep=False,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _shard_round_jit(impl: str, mesh):
+    return jax.jit(_shard_round(impl, mesh))
+
+
+def _round_for(impl: str, mesh):
+    """(dags, edges, nbr_idx, nbr_valid) -> dags round body per mesh.
+
+    ``mesh=None`` returns the exact single-device body (today's behavior,
+    bitwise); a mesh returns the shard_map'd round.
+    """
+    if mesh is None:
+        return functools.partial(_apply_round, impl=impl)
+    return _shard_round(impl, mesh)
+
+
+def make_gossip_round(impl: str = "fused", mesh=None):
     """(dags, edge_active) -> dags anti-entropy round (one jitted call).
 
     ``edge_active[i, j]`` = receiver i hears sender j this tick. Merge is
@@ -224,29 +305,48 @@ def make_gossip_round(impl: str = "fused"):
     fused impls derive the candidate table from the concrete ``edge_active``
     (cached), so this entry point wants concrete masks; jitted drivers
     (``GossipNetwork``) precompute the table from the static adjacency
-    instead.
+    instead. With ``mesh`` the stacked replicas are placed receiver-sharded
+    and the round runs as the shard_map body (``_shard_round``).
     """
-    if impl == "scan":
-        round_scan = _round_jit(impl)
-        return lambda dags, edge_active: round_scan(dags, edge_active, None, None)
+    if mesh is None:
+        if impl == "scan":
+            round_scan = _round_jit(impl)
+            return lambda dags, edge_active: round_scan(
+                dags, edge_active, None, None
+            )
+
+        def round_fn(dags, edge_active):
+            m = np.asarray(edge_active, bool)
+            nbr_idx, nbr_valid = _neighbor_table_cached(m.tobytes(), m.shape[0])
+            return _round_jit(impl)(dags, edge_active, nbr_idx, nbr_valid)
+
+        return round_fn
 
     def round_fn(dags, edge_active):
         m = np.asarray(edge_active, bool)
+        mesh_lib.validate_replica_mesh(m.shape[0], mesh)
         nbr_idx, nbr_valid = _neighbor_table_cached(m.tobytes(), m.shape[0])
-        return _round_jit(impl)(dags, edge_active, nbr_idx, nbr_valid)
+        dags = mesh_lib.shard_replicas(dags, mesh)
+        return _shard_round_jit(impl, mesh)(
+            dags, jnp.asarray(m), nbr_idx, nbr_valid
+        )
 
     return round_fn
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_jit(impl: str):
+def _advance_jit(impl: str, mesh=None):
     """One jitted lax.scan running a whole advance window of sync ticks.
 
     The PRNG key is split inside the scan exactly like the sequential
     per-tick path did host-side, so a batched window is bitwise-identical to
     running its ticks one call at a time. Retraces once per distinct window
-    length (a handful of lengths occur in practice).
+    length (a handful of lengths occur in practice) and once per mesh shape
+    — under a mesh the scan body routes through the shard_map'd round
+    (edge sampling stays a replicated global computation, so the sampled
+    masks are bitwise the single-device ones).
     """
+    apply_round = _round_for(impl, mesh)
 
     def advance(dags, key, ticks, part_active, adj, drop, stride, part_mask,
                 nbr_idx, nbr_valid):
@@ -256,7 +356,7 @@ def _advance_jit(impl: str):
             key, sub = jax.random.split(key)
             pm = jnp.where(pact, part_mask, True)
             edges = _sample_edges(sub, tick, pm, adj, drop, stride)
-            return (_apply_round(dags, edges, nbr_idx, nbr_valid, impl), key), None
+            return (apply_round(dags, edges, nbr_idx, nbr_valid), key), None
 
         (dags, key), _ = jax.lax.scan(body, (dags, key), (ticks, part_active))
         return dags, key
@@ -265,13 +365,16 @@ def _advance_jit(impl: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_jit(impl: str):
+def _converge_jit(impl: str, mesh=None):
     """Device-resident fixpoint flush: ONE jitted lax.while_loop.
 
     The predicate — not yet synced, tick budget left, progress not stalled
     for a full stride cycle — runs on device, replacing the host loop that
     dispatched a sync round, an equality check, and a synced check per tick.
+    Under a mesh the loop body routes through the shard_map'd round; the
+    predicate's reductions are global (GSPMD inserts the collectives).
     """
+    apply_round = _round_for(impl, mesh)
 
     def converge(dags, key, tick, part_mask, adj, drop, stride, limit, stall_limit,
                  nbr_idx, nbr_valid):
@@ -287,7 +390,7 @@ def _converge_jit(impl: str):
             dags, key, tick, stalled, done = carry
             key, sub = jax.random.split(key)
             edges = _sample_edges(sub, tick, part_mask, adj, drop, stride)
-            new = _apply_round(dags, edges, nbr_idx, nbr_valid, impl)
+            new = apply_round(dags, edges, nbr_idx, nbr_valid)
             stalled = jnp.where(trees_equal(new, dags), stalled + 1, 0)
             return (new, key, tick + 1, stalled, done + 1)
 
@@ -327,12 +430,15 @@ class GossipNetwork:
         top: Topology,
         cfg: GossipConfig = GossipConfig(),
         partition: Optional[PartitionSchedule] = None,
+        mesh=None,
     ):
         n = top.num_nodes
         self.topology = top
         self.cfg = cfg
         self.partition = partition
-        self.replicas = replica_lib.init_replicas(dag, bank, n)
+        self.mesh = mesh
+        # init_replicas validates the mesh and shards the receiver axis
+        self.replicas = replica_lib.init_replicas(dag, bank, n, mesh=mesh)
         stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
         self._max_stride = (
             int(stride[top.adjacency].max()) if top.adjacency.any() else 1
@@ -340,7 +446,7 @@ class GossipNetwork:
         self._adj = jnp.asarray(top.adjacency)
         self._drop = jnp.asarray(top.drop)
         self._stride = jnp.asarray(stride)
-        nbr_idx, nbr_valid = _neighbor_table(top.adjacency)
+        nbr_idx, nbr_valid = neighbor_table(top.adjacency)
         self._nbr_idx = jnp.asarray(nbr_idx)
         self._nbr_valid = jnp.asarray(nbr_valid)
         self._key = jax.random.PRNGKey(cfg.seed)
@@ -349,6 +455,17 @@ class GossipNetwork:
             jnp.asarray(partition_matrix(partition.assignment))
             if partition is not None else self._all_mask
         )
+        if mesh is not None:
+            # overlay-wide arrays replicated so the jitted loops see one
+            # committed layout per mesh (the replicas are receiver-sharded
+            # by init_replicas above)
+            (self._adj, self._drop, self._stride, self._nbr_idx,
+             self._nbr_valid, self._all_mask, self._part_mask) = (
+                mesh_lib.replicate(x, mesh) for x in (
+                    self._adj, self._drop, self._stride, self._nbr_idx,
+                    self._nbr_valid, self._all_mask, self._part_mask,
+                )
+            )
         self.tick = 0                # global tick index (drives strides)
         self.rounds_run = 0          # ticks actually executed
         self.device_calls = 0        # jitted sync dispatches issued
@@ -393,7 +510,7 @@ class GossipNetwork:
 
     def _run_ticks(self, ticks, part_active) -> None:
         """Execute a batch of sync ticks as ONE jitted device call."""
-        dags, self._key = _advance_jit(self.cfg.impl)(
+        dags, self._key = _advance_jit(self.cfg.impl, self.mesh)(
             self.replicas.dags, self._key,
             jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
             self._adj, self._drop, self._stride, self._part_mask,
@@ -445,7 +562,7 @@ class GossipNetwork:
         """
         limit = self.topology.num_nodes * min(self._max_stride, 64)
         stall_limit = min(self._max_stride, 64)
-        dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl)(
+        dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl, self.mesh)(
             self.replicas.dags, self._key, jnp.asarray(self.tick, jnp.int32),
             self._mask_at(at_time), self._adj, self._drop, self._stride,
             limit, stall_limit, self._nbr_idx, self._nbr_valid,

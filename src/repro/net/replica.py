@@ -4,7 +4,10 @@
 ``DagState`` whose every leaf grew a leading replica axis — one pytree on
 device, not R Python objects — so an anti-entropy round is one fused masked
 reduction over the sender axis (see ``repro.net.gossip`` and
-``repro.kernels.gossip_merge``) instead of a Python loop over merges.
+``repro.kernels.gossip_merge``) instead of a Python loop over merges. That
+leading receiver axis is also the scaling axis: ``init_replicas(mesh=...)``
+partitions it over a device mesh's "nodes" axis (``repro.net.mesh``), which
+is what lets R grow past one device's memory.
 
 The model bank stays SHARED across replicas: rows are allocated from a
 global publish sequence (``publish_local``), so a transaction occupies the
@@ -37,11 +40,33 @@ class ReplicaSet(NamedTuple):
         return int(self.dags.publisher.shape[0])
 
 
-def init_replicas(dag: DagState, bank: Any, num_replicas: int) -> ReplicaSet:
-    """Every node starts from the same view (the genesis ledger)."""
-    dags = jax.tree_util.tree_map(
-        lambda x: jnp.repeat(x[None], num_replicas, axis=0), dag
-    )
+def init_replicas(
+    dag: DagState, bank: Any, num_replicas: int, mesh=None
+) -> ReplicaSet:
+    """Every node starts from the same view (the genesis ledger).
+
+    ``mesh`` (repro.net.mesh) places the stacked leaves with the leading
+    receiver axis sharded over the mesh's "nodes" axis from the start: the
+    broadcast runs jitted with sharded ``out_shardings``, so each device
+    materializes only its R/shards receiver block — the whole point of the
+    mesh is a stack too big for one device. The bank stays replicated
+    either way (it is shared, see above).
+    """
+
+    def stack(d):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.repeat(x[None], num_replicas, axis=0), d
+        )
+
+    if mesh is None:
+        return ReplicaSet(dags=stack(dag), bank=bank)
+    from repro.net import mesh as mesh_lib
+
+    mesh_lib.validate_replica_mesh(num_replicas, mesh)
+    stacked_like = jax.eval_shape(stack, dag)
+    dags = jax.jit(
+        stack, out_shardings=mesh_lib.replica_sharding(mesh, stacked_like)
+    )(dag)
     return ReplicaSet(dags=dags, bank=bank)
 
 

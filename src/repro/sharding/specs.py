@@ -183,3 +183,17 @@ def to_shardings(mesh, specs: Any) -> Any:
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def replica_specs(tree: Any, axis: str = "nodes") -> Any:
+    """Leading-axis sharding for node-stacked replica pytrees.
+
+    The gossip ``ReplicaSet`` (repro.net.replica) stacks N per-node
+    ``DagState`` replicas along every leaf's LEADING axis; partitioning that
+    receiver axis over a mesh axis (default ``"nodes"``, see
+    ``repro.net.mesh``) is what scales replica memory and sync FLOPs past
+    one device. Inner dims are replicated — per-replica ledger rows are tiny
+    compared to the receiver axis, and the fused sync round wants whole rows
+    local to the receiver's shard.
+    """
+    return jax.tree_util.tree_map(lambda _: P(axis), tree)

@@ -1,6 +1,45 @@
 import os
 import sys
 
-# tests must see ONE device (the dry-run sets its own flags in-process);
-# keep any user XLA_FLAGS but never force a device count here.
+import pytest
+
+# tests must see ONE device unless the environment forces more (the CI
+# 8-device lane exports XLA_FLAGS=--xla_force_host_platform_device_count=8;
+# the dry-run sets its own flags in-process); keep any user XLA_FLAGS but
+# never force a device count here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_KNOWN_FAILURES_FILE = os.path.join(os.path.dirname(__file__), "known_failures.txt")
+
+
+def _known_failures():
+    """Node ids of the pre-existing seed failures (see ROADMAP Open items)."""
+    try:
+        with open(_KNOWN_FAILURES_FILE) as f:
+            lines = (ln.split("#", 1)[0].strip() for ln in f)
+            return {ln for ln in lines if ln}
+    except OSError:
+        return set()
+
+
+def pytest_collection_modifyitems(config, items):
+    """Strict-xfail every known seed failure.
+
+    A listed test that fails is expected (CI stays green on real signal); a
+    listed test that PASSES is reported as a failure — fixing one must also
+    delete its line from tests/known_failures.txt. Node ids are matched both
+    rootdir-relative ("tests/test_x.py::t") and bare ("test_x.py::t") so the
+    list works from the repo root and from inside tests/.
+    """
+    known = _known_failures()
+    if not known:
+        return
+    known |= {k.split("/", 1)[1] for k in known if k.startswith("tests/")}
+    for item in items:
+        if item.nodeid in known or f"tests/{item.nodeid}" in known:
+            item.add_marker(
+                pytest.mark.xfail(
+                    reason="known seed failure (tests/known_failures.txt)",
+                    strict=True,
+                )
+            )
