@@ -38,6 +38,7 @@ from repro.net import gossip as gossip_lib
 from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
 
 JSON_PATH = "BENCH_gossip_sync.json"
 
@@ -210,6 +211,93 @@ def run_dispatch_batching(
     return ratio
 
 
+# ---------------------------------------------------------------------------
+# Bank gossip: Table-I bandwidth sweep + infinite-capacity equivalence
+# ---------------------------------------------------------------------------
+
+
+def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg):
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
+                    seed=seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=seed)
+    return run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.ring(n, seed=seed, bandwidth=bandwidth),
+        gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed, impl=impl),
+        bank_gossip=bank_cfg,
+    )
+
+
+def run_bank_gossip(
+    n: int = 16, iterations: int = 40, seed: int = 0,
+    impls=("fused", "scan"), record: dict = None,
+):
+    """Model-payload transport priced on Table-I link classes (16-node ring).
+
+    Two claims, machine-checked into ``BENCH_gossip_sync.json``:
+
+    * EQUIVALENCE (the CI tripwire): with unlimited per-link capacity, bank
+      gossip is bitwise the PR-3 bankless run — identical accuracy curve
+      and union ledger — for every round impl;
+    * SWEEP: pricing the paper's phi = 7 MB model over the Table-I link
+      classes, time-to-model-availability decouples from row visibility:
+      the max chunk backlog (``bank_lag``) grows as links shrink from the
+      Table-I 100 Mbps budget to an IoT-class 1 Mbps uplink, while the
+      byte meter records what the run actually paid.
+    """
+    rows = []
+    for impl in impls:
+        base = _run_banked(n, iterations, seed, impl, float("inf"), None)
+        banked = _run_banked(
+            n, iterations, seed, impl, float("inf"),
+            BankGossipConfig(chunks_per_slot=4),
+        )
+        equivalent = (
+            np.array_equal(base.accs, banked.accs)
+            and np.array_equal(base.times, banked.times)
+            and all(
+                np.array_equal(np.asarray(getattr(base.extras["dag"], f)),
+                               np.asarray(getattr(banked.extras["dag"], f)))
+                for f in base.extras["dag"]._fields
+            )
+        )
+        emit(
+            f"gossip/bank_gossip/equivalence/{impl}", float(equivalent),
+            f"bitwise_equal_unbanked={equivalent};"
+            f"bytes={banked.extras['bank_bytes_sent']:.0f}",
+        )
+        rows.append(dict(
+            kind="equivalence", impl=impl, n=n, iterations=iterations,
+            bitwise_equal_unbanked=bool(equivalent),
+            bytes_sent=float(banked.extras["bank_bytes_sent"]),
+        ))
+    for cls, bits in topo.TABLE1_LINK_CLASSES.items():
+        res = _run_banked(
+            n, iterations, seed, "fused", bits,
+            BankGossipConfig(chunks_per_slot=4, slot_bytes=7e6),   # Table-I phi
+        )
+        lag_curve = res.extras["bank_lag_curve"]
+        peak_lag = int(lag_curve[:, 2].max()) if len(lag_curve) else 0
+        final_missing = int(res.extras["bank_missing_final"].max())
+        emit(
+            f"gossip/bank_gossip/sweep/{cls}", peak_lag,
+            f"final_acc={res.accs[-1]:.3f};final_missing={final_missing};"
+            f"bytes={res.extras['bank_bytes_sent']:.3g}",
+        )
+        rows.append(dict(
+            kind="sweep", link_class=cls,
+            bandwidth_bps=bits if np.isfinite(bits) else None, n=n,
+            iterations=iterations, peak_chunk_lag=peak_lag,
+            final_missing_chunks=final_missing,
+            bytes_sent=float(res.extras["bank_bytes_sent"]),
+            final_acc=float(res.accs[-1]),
+        ))
+    if record is not None:
+        record["bank_gossip"] = rows
+    return rows
+
+
 def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
     record = dict(record, schema="gossip_sync_bench_v1", backend=jax.default_backend())
     with open(path, "w") as f:
@@ -218,12 +306,15 @@ def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
 
 
 def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
-    """The fast-path measurements alone (no accuracy sweeps)."""
+    """Everything BENCH_gossip_sync.json carries: the fast-path grid, the
+    sharded round, dispatch batching, and the bank-gossip equivalence +
+    bandwidth sweep (no accuracy sweeps)."""
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
     run_sharded_sync(record=record)
     run_dispatch_batching(record=record)
+    run_bank_gossip(record=record)
     if own:
         write_bench_json(record, json_path)
     return record
@@ -294,6 +385,7 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
     run_sync_round_grid(record=record)
     run_dispatch_batching(iterations=iterations, num_nodes=num_nodes, seed=seed,
                           record=record)
+    run_bank_gossip(seed=seed, record=record)
     write_bench_json(record, json_path)
     run_sweep(iterations=iterations, num_nodes=num_nodes, seed=seed)
     run_partition(iterations=iterations, num_nodes=num_nodes, seed=seed)
@@ -301,8 +393,10 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
 
 def smoke(json_path: str = JSON_PATH) -> int:
     """CI tripwire: reduced grid; fail on lost scan/fused equivalence, a
-    < 2x speedup, or (when >1 device is visible — the 8-device CI lane) a
-    mesh-sharded round that diverges from the single-device fused round.
+    < 2x speedup, a mesh-sharded round that diverges from the single-device
+    fused round (when >1 device is visible — the 8-device CI lane), or a
+    bank-gossip run at unlimited capacity that is no longer bitwise the
+    bankless PR-3 path.
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -312,6 +406,7 @@ def smoke(json_path: str = JSON_PATH) -> int:
         ns=(48,), caps=(128,), reps=10, record=record,
     )
     sharded_rows = run_sharded_sync(reps=5, record=record)
+    bank_rows = run_bank_gossip(n=8, iterations=10, record=record)
     write_bench_json(record, json_path)
     ok = True
     for row in rows:
@@ -327,6 +422,14 @@ def smoke(json_path: str = JSON_PATH) -> int:
             ok = False
     if jax.device_count() > 1 and not sharded_rows:
         print("# SMOKE FAIL: multi-device backend but no sharded rows recorded")
+        ok = False
+    for row in bank_rows:
+        if row["kind"] == "equivalence" and not row["bitwise_equal_unbanked"]:
+            print(f"# SMOKE FAIL: bank gossip at unlimited capacity diverged "
+                  f"from the bankless path: {row}")
+            ok = False
+    if not any(r["kind"] == "equivalence" for r in bank_rows):
+        print("# SMOKE FAIL: no bank-gossip equivalence rows recorded")
         ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1

@@ -1,0 +1,88 @@
+"""Bandwidth-limited model gossip: Table-I link classes on a 16-node ring.
+
+    python examples/bandwidth_limited.py [--nodes 16]
+
+Up to PR 3 the simulator's model bank was shared host-side: a transaction
+was usable the instant its DAG row arrived, so payload transport — the
+traffic Table I prices at phi / B per transfer — was free. With
+``bank_gossip`` enabled (repro.net.bank) every node must actually RECEIVE a
+model's content-addressed chunks over its links before Algorithm 2 may
+select or approve the transaction, and each chunk is charged against the
+link's bits/s budget.
+
+This walkthrough runs the same 16-node ring sim over the Table-I link
+classes (100 Mbps — the paper's B — down to an IoT-class 1 Mbps uplink)
+with the paper's phi = 7 MB model, and shows how time-to-model-availability
+decouples from row visibility as links shrink: rows still travel in one
+sync tick per hop, but the models behind them arrive later and later, and
+tips wait on payloads.
+"""
+import argparse
+
+import numpy as np
+
+from repro.fl.experiments import default_dagfl_config, make_cnn_setup
+from repro.fl.systems import SimConfig, run_dagfl_gossip
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.gossip import GossipConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument("--iterations", type=int, default=60)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n = args.nodes
+
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=args.iterations, eval_every=10, seed=args.seed)
+
+    print(f"{n}-node ring, phi = 7 MB per model (Table I), sync period 1 s\n")
+    print(f"{'link class':>20} {'peak lag':>9} {'final lag':>10} "
+          f"{'GB moved':>9} {'final acc':>10}")
+
+    curves = {}
+    for cls, bits in topo.TABLE1_LINK_CLASSES.items():
+        task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=args.seed)
+        res = run_dagfl_gossip(
+            task, nodes, dcfg, sim, gval,
+            topology=topo.ring(n, seed=args.seed, bandwidth=bits),
+            gossip=GossipConfig(sync_period=1.0, seed=args.seed),
+            bank_gossip=BankGossipConfig(chunks_per_slot=4, slot_bytes=7e6),
+        )
+        lag = res.extras["bank_lag_curve"]
+        curves[cls] = res
+        peak = int(lag[:, 2].max()) if len(lag) else 0
+        print(f"{cls:>20} {peak:>9d} "
+              f"{int(res.extras['bank_missing_final'].max()):>10d} "
+              f"{res.extras['bank_bytes_sent'] / 1e9:>9.2f} "
+              f"{res.accs[-1]:>10.3f}")
+
+    print("\nlag = max over nodes of model chunks referenced by the local "
+          "ledger but not yet received;\nthe 'ideal' wire is the PR-3 "
+          "behavior (payloads free) and must show zero lag everywhere.")
+
+    # availability-vs-visibility timeline for the constrained class
+    cls = "constrained_1mbps"
+    res = curves[cls]
+    print(f"\n{cls}: payload lag vs row divergence over the run")
+    print("  iter    time   max_missing_rows   max_missing_chunks")
+    rows = {int(i): int(m) for i, _, m in res.extras["divergence_curve"]}
+    for it, t, lagv in res.extras["bank_lag_curve"]:
+        print(f"  {int(it):4d}  {t:6.1f}s   {rows.get(int(it), 0):12d} "
+              f"      {int(lagv):12d}")
+
+    ideal = curves["ideal"]
+    same = np.array_equal(ideal.accs, res.accs)
+    if same:
+        print("\nconstrained accuracy curve happened to match ideal at this "
+              "scale — the gating still shows in the lag table above")
+    else:
+        print("\nconstrained accuracy curve diverged from ideal: payload "
+              "starvation changed which tips Algorithm 2 could approve")
+
+
+if __name__ == "__main__":
+    main()

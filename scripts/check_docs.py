@@ -1,0 +1,115 @@
+"""Docs CI check: execute fenced code snippets and verify relative links.
+
+    python scripts/check_docs.py [files...]
+
+Defaults to ``README.md``, every ``docs/*.md``, and ``benchmarks/README.md``.
+Two checks, both against the INSTALLED package (CI runs this after
+``pip install -e ".[test]"``, so a snippet that imports a module the package
+no longer ships fails loudly):
+
+* fenced ```python blocks are executed as scripts and ```bash blocks run
+  under ``bash -euo pipefail``, each from the repo root. A block whose FIRST
+  line contains ``docs: skip`` is exempt (reserved for illustrative or
+  expensive commands — the full test suite, multi-minute sims); everything
+  else must exit 0.
+* every relative markdown link ``[text](path)`` must point at a file or
+  directory that exists (anchors and external http(s)/mailto links are
+  ignored), so renames cannot silently strand the docs.
+
+Exit 0 iff every snippet ran and every link resolves.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```(\w+)?\s*$")
+LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+SKIP_MARK = "docs: skip"
+
+
+def extract_blocks(text: str):
+    """Yield (language, first_line_no, source) for each fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1):
+            lang, start = m.group(1).lower(), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield lang, start + 1, "\n".join(body)
+        i += 1
+
+
+def run_block(lang: str, src: str) -> subprocess.CompletedProcess:
+    if lang == "python":
+        cmd = [sys.executable, "-c", src]
+    else:
+        cmd = ["bash", "-euo", "pipefail", "-c", src]
+    return subprocess.run(
+        cmd, cwd=REPO, capture_output=True, text=True, timeout=1200
+    )
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(REPO)
+
+    for lang, line, src in extract_blocks(text):
+        if lang not in ("python", "bash", "sh"):
+            continue
+        first = src.lstrip().splitlines()[0] if src.strip() else ""
+        if SKIP_MARK in first:
+            print(f"  {rel}:{line} [{lang}] skipped (marked)")
+            continue
+        proc = run_block("python" if lang == "python" else "bash", src)
+        status = "ok" if proc.returncode == 0 else f"FAILED ({proc.returncode})"
+        print(f"  {rel}:{line} [{lang}] {status}")
+        if proc.returncode != 0:
+            errors.append(
+                f"{rel}:{line}: {lang} snippet failed\n"
+                f"--- stderr ---\n{proc.stderr[-2000:]}"
+            )
+
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target_path = (path.parent / target.split("#")[0]).resolve()
+        if not target_path.exists():
+            errors.append(f"{rel}: broken relative link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [REPO / "README.md", REPO / "benchmarks" / "README.md"]
+        files += sorted((REPO / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing doc file: {f}")
+            continue
+        print(f"# {f.relative_to(REPO)}")
+        errors.extend(check_file(f))
+    if errors:
+        print("\n== DOCS CHECK FAILED ==")
+        for e in errors:
+            print(e)
+        return 1
+    print("\n# docs ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

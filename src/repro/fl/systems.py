@@ -35,6 +35,7 @@ from repro.fl.tasks import make_epoch_train
 from repro.net import gossip as gossip_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo_lib
+from repro.net.bank import BankGossipConfig
 
 
 @dataclass
@@ -325,21 +326,28 @@ class _GossipLedger:
 
     name = "dagfl_gossip"
 
-    def __init__(self, state, topology, gossip, partition, mesh=None):
+    def __init__(self, state, topology, gossip, partition, mesh=None,
+                 bank_gossip=None):
         self.net = gossip_lib.GossipNetwork(
-            state.dag, state.bank, topology, gossip, partition, mesh=mesh
+            state.dag, state.bank, topology, gossip, partition, mesh=mesh,
+            bank_cfg=bank_gossip,
         )
+        self.capacity = int(state.dag.publisher.shape[0])
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
         self._commit = _jit_of(_gossip_commit)
         self.approvals_issued = 0
         self.divergence = []
+        self.bank_lag = []
 
     @property
     def bank(self):
         return self.net.bank
 
     def view(self, node_id):
-        return self.net.read(node_id)
+        # with the bank gossiped this is the node's USABLE view: rows whose
+        # model chunks have not arrived are masked out, so Algorithm-2 tip
+        # selection — and hence approvals — waits for the payload
+        return self.net.read_view(node_id)
 
     def advance(self, t):
         self.net.advance(t)
@@ -351,6 +359,10 @@ class _GossipLedger:
             jnp.int32(self.seq),
         )
         self.net.write(node_id, dag_i, bank)
+        # transport accounting: the committer holds its own payload's
+        # chunks; the ring-reused slot's old content leaves everyone else
+        self.net.bank_commit(node_id, self.seq % self.capacity,
+                             prepared.new_params)
         self.seq += 1
         self.approvals_issued += int(np.sum(np.asarray(prepared.chosen_rows) >= 0))
 
@@ -361,9 +373,21 @@ class _GossipLedger:
         self.divergence.append(
             (done, float(t1), int(self.net.missing_rows(union).max()))
         )
+        if self.net.bank_cfg is not None:
+            self.bank_lag.append(
+                (done, float(t1), int(self.net.missing_chunks().max()))
+            )
 
     def extras(self, union):
-        return {
+        out = {}
+        if self.net.bank_cfg is not None:
+            out = {
+                # payload transport: chunks still owed vs what the run paid
+                "bank_missing_final": self.net.missing_chunks(),
+                "bank_bytes_sent": self.net.bytes_sent(),
+                "bank_lag_curve": np.asarray(self.bank_lag, dtype=np.float64),
+            }
+        return out | {
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
             "device_calls": self.net.device_calls,
@@ -391,6 +415,7 @@ def run_dagfl_gossip(
     gossip: Optional[gossip_lib.GossipConfig] = None,
     partition: Optional[gossip_lib.PartitionSchedule] = None,
     mesh=None,
+    bank_gossip: Optional[BankGossipConfig] = None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -405,6 +430,17 @@ def run_dagfl_gossip(
     ``mesh`` (repro.net.mesh) shards the replica set's receiver axis over
     the mesh's "nodes" axis — bitwise the same simulation, run across
     devices.
+
+    ``bank_gossip`` (repro.net.bank) makes MODEL PAYLOAD transport explicit:
+    chunk availability gossips alongside the rows, each transfer is charged
+    against the overlay's Table-I per-link bandwidth
+    (``Topology.bandwidth``), and a node's view only shows transactions
+    whose model chunks have arrived — Algorithm-2 approvals wait for the
+    payload. With unlimited per-link capacity this is BITWISE the
+    ``bank_gossip=None`` run for every round impl and mesh (the chunk step
+    is deterministic and leaves the PRNG stream untouched); with Table-I
+    budgets, time-to-model-availability (``extras["bank_lag_curve"]``) and
+    the byte bill (``extras["bank_bytes_sent"]``) become measurable.
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
@@ -413,7 +449,8 @@ def run_dagfl_gossip(
     return _run_dagfl_events(
         task, nodes, dcfg, sim, global_val, weighted,
         lambda state, commit_fn: _GossipLedger(
-            state, topology, gossip, partition, mesh=mesh
+            state, topology, gossip, partition, mesh=mesh,
+            bank_gossip=bank_gossip,
         ),
     )
 

@@ -1,5 +1,6 @@
 from repro.kernels import ops, ref
 from repro.kernels.ops import (
+    chunk_dedup,
     decode_attention,
     fedavg,
     flash_attention,
@@ -10,6 +11,7 @@ from repro.kernels.ops import (
 __all__ = [
     "ops",
     "ref",
+    "chunk_dedup",
     "decode_attention",
     "fedavg",
     "flash_attention",

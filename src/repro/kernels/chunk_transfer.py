@@ -1,0 +1,148 @@
+"""Pallas kernel: content-addressed chunk dedup + transfer selection.
+
+The bank-gossip hot spot (``repro.net.bank``): every sync tick each node
+must decide which model chunks it still needs (content-addressed dedup
+against everything it already holds) and which of those its active
+neighbors can supply within the tick's per-link byte budget. Both steps are
+masked reductions in the same mold as ``repro.kernels.gossip_merge`` — no
+data-dependent shapes, so the whole bank tick stays inside the jitted
+``lax.scan`` of ``GossipNetwork.advance``.
+
+Two layers, array-level on purpose (no ``DagState``/pytree types here):
+
+``chunk_dedup``        sat[i, s, c] = node i effectively has chunk (s, c):
+                       it physically holds some chunk (s', c) with an equal
+                       content digest. Chunking is ALIGNED — dedup compares
+                       chunks at the same offset c across slots, capturing
+                       whole-model identity (lazy republish costs zero
+                       bytes) but not offset-shifted collisions. Dense
+                       blocked Pallas kernel (the TPU shape; interpreted
+                       elsewhere) with ``repro.kernels.ref.chunk_dedup_ref``
+                       as the pure-lax oracle/CPU fast path — the same
+                       dispatch pattern as ``gossip_winner``.
+
+``transfer_select``    per receiver, assign each still-needed chunk to its
+                       lowest-indexed active neighbor that has the content,
+                       then admit chunks per link in canonical (slot, chunk)
+                       order until the link's whole-chunk budget runs out.
+                       Pure lax; deterministic (no sampling), so the bank
+                       tick never touches the PRNG stream and the gossip
+                       round stays bitwise-identical with bank gossip
+                       enabled under infinite bandwidth.
+
+Equivalence pallas-vs-ref is property-tested in ``tests/test_net_bank.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+BLOCK_S = 128   # digest slot-block per grid step
+
+
+def _dedup_kernel(have_ref, dig_ref, dblk_ref, sat_ref):
+    # have_ref: (1, S, C) i32 — receiver i's physical presence bitmap
+    # dig_ref:  (S, C) f32   — full digest table (the dedup candidates)
+    # dblk_ref: (bs, C) f32  — this block's target digests
+    # sat_ref:  (1, bs, C) i32 — effective availability for the block
+    hv = have_ref[...][0] != 0                               # (S, C)
+    eq = dblk_ref[...][:, None, :] == dig_ref[...][None, :, :]   # (bs, S, C)
+    sat = jnp.any(eq & hv[None, :, :], axis=1)               # (bs, C)
+    sat_ref[...] = sat.astype(jnp.int32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def chunk_dedup_pallas(
+    have: jnp.ndarray,      # (R, S, C) bool
+    digest: jnp.ndarray,    # (S, C) f32
+    block_s: int = BLOCK_S,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(R, S, C) bool effective availability — the Pallas reduction.
+
+    Grid step (i, sb) loads receiver i's presence bitmap once against a
+    ``block_s``-slot slab of the digest table and any-reduces the aligned
+    content matches. Padding slots carry NaN digests, which compare unequal
+    to everything (including themselves), so they can neither satisfy nor
+    be satisfied.
+    """
+    r, s, c = have.shape
+    bs = min(block_s, s) if s else block_s
+    pad = (-s) % bs
+    dig = jnp.pad(jnp.asarray(digest, jnp.float32), ((0, pad), (0, 0)),
+                  constant_values=jnp.nan)
+    hv = jnp.pad(jnp.asarray(have, jnp.int32), ((0, 0), (0, pad), (0, 0)))
+
+    sat = pl.pallas_call(
+        _dedup_kernel,
+        grid=(r, (s + pad) // bs),
+        in_specs=[
+            pl.BlockSpec((1, s + pad, c), lambda i, sb: (i, 0, 0)),
+            pl.BlockSpec((s + pad, c), lambda i, sb: (0, 0)),
+            pl.BlockSpec((bs, c), lambda i, sb: (sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, c), lambda i, sb: (i, sb, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, s + pad, c), jnp.int32),
+        interpret=interpret,
+    )(hv, dig, dig)
+    # physical presence short-circuits the digest match (NaN digests — a
+    # payload that trained to NaN — compare unequal even to themselves;
+    # see ref.chunk_dedup_ref)
+    return (sat[:, :s, :] > 0) | jnp.asarray(have, bool)
+
+
+def chunk_dedup(have, digest, impl: str = None, block_s: int = BLOCK_S,
+                interpret: bool = None) -> jnp.ndarray:
+    """Content-addressed availability with backend dispatch.
+
+    ``impl``: "pallas" forces the kernel (interpreted off-TPU), "lax" the
+    pure-lax oracle; None picks pallas on TPU, lax elsewhere — the same
+    rule as ``gossip_merge.gossip_winner``.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    if impl == "lax":
+        return ref.chunk_dedup_ref(have, digest)
+    if impl != "pallas":
+        raise ValueError(f"unknown chunk_dedup impl: {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return chunk_dedup_pallas(have, digest, block_s=block_s, interpret=interpret)
+
+
+def transfer_select(
+    need: jnp.ndarray,         # (Rb, M) bool — receiver block's wanted chunks
+    src_have: jnp.ndarray,     # (R, M) bool — sender effective availability
+    edge_active: jnp.ndarray,  # (Rb, R) bool — receiver i hears sender j
+    afford: jnp.ndarray,       # (Rb, R) i32 — whole chunks per link this tick
+):
+    """One tick of bandwidth-limited chunk transfers (pure lax, no PRNG).
+
+    Each needed chunk is assigned to the LOWEST-indexed active sender whose
+    effective availability covers it (deterministic — merge ties in the
+    gossip round break the same way); each link then admits its assigned
+    chunks in ascending flat (slot, chunk) order until ``afford`` whole
+    chunks have been spent. ``Rb`` may be a mesh shard's receiver block
+    reduced against the all-gathered availability bitmaps — per-receiver
+    arithmetic only, so the sharded tick is bitwise the single-device one.
+
+    Returns ``(take (Rb, M) bool, spent (Rb, R) i32 chunks moved per link,
+    pending (Rb, R) bool — link had assigned work left over)``.
+    """
+    rb, m = need.shape
+    r = src_have.shape[0]
+    can = edge_active[:, :, None] & need[:, None, :] & src_have[None, :, :]
+    idx = jnp.arange(r, dtype=jnp.int32)[None, :, None]
+    sender = jnp.min(jnp.where(can, idx, r), axis=1)         # (Rb, M); r = none
+    assigned = can & (idx == sender[:, None, :])             # (Rb, R, M)
+    rank = jnp.cumsum(assigned.astype(jnp.int32), axis=2) - 1
+    take_link = assigned & (rank < afford[:, :, None])
+    take = jnp.any(take_link, axis=1)
+    spent = jnp.sum(take_link.astype(jnp.int32), axis=2)
+    pending = jnp.any(assigned & ~take_link, axis=2)
+    return take, spent, pending

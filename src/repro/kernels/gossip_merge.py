@@ -37,6 +37,18 @@ key slab once and reduces it against receiver i's mask column. On this
 CPU container ``interpret=True`` drives the same kernel through the Pallas
 interpreter; ``repro.kernels.ref.gossip_winner_ref`` is the pure-lax
 fallback/oracle that production CPU paths route through.
+
+Since the mesh-sharded round (PR 3), every entry point is BLOCK-addressed:
+``mask`` may be a rectangular (Rr, R) receiver block of the full sender
+axis — a shard reduces its own receivers against the all-gathered senders —
+with the block's global position supplied as ``row_ids`` (per-receiver
+sender ids, lax paths) or ``row_offset`` (contiguous block start, the
+Pallas kernel's (1, 1) scalar input), so self-tie-preference and the
+all-empty fallback keep addressing the receiver's own global row.
+``row_ids=None`` / ``row_offset=0`` is the identity block (receiver i IS
+sender i — the single-device round). ``repro.kernels.chunk_transfer`` is
+the sibling reduction for bank gossip: chunk-availability dedup + transfer
+selection in the same masked-reduction mold.
 """
 from __future__ import annotations
 

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.chunk_transfer import chunk_dedup, transfer_select
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
 from repro.kernels.gossip_merge import gossip_winner, gossip_winner_nbr
@@ -52,5 +53,6 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
 
 __all__ = [
     "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
-    "gossip_winner", "gossip_winner_nbr", "ref",
+    "gossip_winner", "gossip_winner_nbr", "chunk_dedup", "transfer_select",
+    "ref",
 ]

@@ -62,6 +62,38 @@ def gossip_winner_ref(
     return src.astype(jnp.int32), ac.astype(jnp.int32)
 
 
+def chunk_dedup_ref(
+    have: jnp.ndarray,      # (R, S, C) bool — physical chunk presence per node
+    digest: jnp.ndarray,    # (S, C) f32 — content digest of every store chunk
+) -> jnp.ndarray:
+    """Content-addressed chunk availability (oracle + CPU fast path).
+
+    A node effectively HAS chunk (s, c) of the model store iff it physically
+    holds some chunk (s', c) whose content digest equals ``digest[s, c]`` —
+    identical payloads (e.g. a lazy node republishing the aggregated model
+    verbatim) therefore cost zero transfer bytes the second time. Chunking is
+    ALIGNED: dedup only compares chunks at the same offset ``c`` across
+    slots, which captures whole-model and per-chunk identity but not
+    offset-shifted collisions (see ``repro.net.bank``).
+
+    Returns ``sat (R, S, C) bool`` — the effective-availability bitmap the
+    transfer-selection step subtracts from each node's referenced set.
+
+    Physical presence short-circuits the digest comparison (``have`` ORs
+    into the result): a chunk a node actually holds is available even when
+    its digest is NaN (a payload that trained to NaN compares unequal to
+    ITSELF), so degenerate models can still gossip at physical identity —
+    they just lose cross-slot dedup.
+    """
+    have = jnp.asarray(have, bool)
+    # eq[p, s, c]: store chunk (p, c) holds the same content as (s, c)
+    eq = digest[:, None, :] == digest[None, :, :]             # (S, S, C)
+    # sat[i, s, c] = have[i, s, c] | any_p have[i, p, c] & eq[p, s, c]
+    return have | (jnp.einsum(
+        "ipc,psc->isc", have.astype(jnp.int32), eq.astype(jnp.int32)
+    ) > 0)
+
+
 def fedavg_ref(weights: jnp.ndarray, models: jnp.ndarray) -> jnp.ndarray:
     """Eq. (1): weighted average of k flattened models.
 

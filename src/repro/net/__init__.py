@@ -33,6 +33,13 @@ supplies the missing network layer:
                 collective gather of sender rows (``shard_map`` body in
                 ``gossip``) — bitwise-equal to the single-device round.
 
+  ``bank``      priced model-payload transport: per-node chunk-availability
+                bitmaps over ONE content-addressed store, content dedup
+                (``repro.kernels.chunk_transfer``), per-link Table-I byte
+                budgets with rollover, and view gating — a transaction is
+                usable only once its model chunks arrived. Off by default;
+                with unlimited capacity it is bitwise the bankless path.
+
 Data flow: ``topology`` builds the overlay → ``replica`` stacks the
 per-node ledgers → ``gossip`` moves rows between them → ``repro.fl.systems.
 run_dagfl_gossip`` interleaves sync ticks with Algorithm-2 prepare/commit
@@ -40,14 +47,16 @@ events so tip staleness, duplicate approvals across stale views, and
 partition/heal convergence become measurable against the shared-ledger
 baseline.
 """
-from repro.net import gossip, mesh, replica, topology
+from repro.net import bank, gossip, mesh, replica, topology
+from repro.net.bank import BankGossipConfig, BankState
 from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
 from repro.net.mesh import make_gossip_mesh
 from repro.net.replica import ReplicaSet
 from repro.net.topology import Topology
 
 __all__ = [
-    "gossip", "mesh", "replica", "topology",
+    "bank", "gossip", "mesh", "replica", "topology",
+    "BankGossipConfig", "BankState",
     "GossipConfig", "GossipNetwork", "PartitionSchedule",
     "ReplicaSet", "Topology", "make_gossip_mesh",
 ]

@@ -43,10 +43,25 @@ device-resident and are traced once per (impl, mesh). ``mesh=None``
 preserves the single-device paths bitwise, and the sharded round is
 bitwise-equal to them (property-tested in ``tests/test_net_mesh.py``).
 
+Bank gossip: constructed with ``bank_cfg=BankGossipConfig(...)``
+(``repro.net.bank``), every tick also moves MODEL PAYLOAD availability:
+after the row merge, each node pulls the content-addressed chunks of rows
+it can see but cannot yet use, charged against the link's Table-I byte
+budget (``Topology.bandwidth``; partial-chunk credit rolls over across
+ticks). The transport state (presence bitmaps + link credit) rides the
+same scan carry; under a mesh the tick all-gathers availability BITMAPS,
+never payload bytes. The chunk step is deterministic — no PRNG — so with
+unlimited capacity the whole trajectory is bitwise the ``bank_cfg=None``
+path (the CI-enforced equivalence); ``converge()`` then also waits for
+referenced chunks to arrive, with its tick bound extended by the slowest
+link's slot-drain time. ``bank_cfg=None`` (default) is exactly the PR-3
+driver.
+
 ``GossipNetwork`` is the host-side driver the simulator talks to: it owns
 the replica set, the tick clock, and the schedule bookkeeping; all jitted
-entry points live at module level (cached per ``impl`` x ``mesh``), so
-constructing many networks in a benchmark sweep re-traces nothing.
+entry points live at module level (cached per ``impl`` x ``mesh``
+x bank backend), so constructing many networks in a benchmark sweep
+re-traces nothing.
 """
 from __future__ import annotations
 
@@ -62,9 +77,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import dag as dag_lib
 from repro.core.dag import DagState
+from repro.kernels import chunk_transfer as chunk_kernel
 from repro.kernels import gossip_merge as gossip_kernel
+from repro.net import bank as bank_lib
 from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
+from repro.net.bank import BankGossipConfig, BankState
 from repro.net.topology import Topology, neighbor_table, partition_matrix
 
 
@@ -295,6 +313,164 @@ def _round_for(impl: str, mesh):
     return _shard_round(impl, mesh)
 
 
+# ---------------------------------------------------------------------------
+# Bank-gossip tick: DAG round + priced chunk transfers (repro.net.bank)
+# ---------------------------------------------------------------------------
+
+
+def _bank_tick_single(dags, bstate, digest, edges, nbr_idx, nbr_valid,
+                      cap_bytes, chunk_bytes, impl, bank_impl):
+    """One sync tick with the model bank gossiped (single-device body).
+
+    Rows merge first (the unchanged PR-3 round), then the chunk step runs on
+    the POST-merge replicas over the SAME sampled edge mask: metadata and
+    payload travel the same links in the same tick, so under infinite
+    bandwidth availability tracks visibility exactly (see ``repro.net.bank``)
+    and the dags trajectory — and the PRNG stream, which the deterministic
+    chunk step never touches — is bitwise the bankless path.
+    """
+    dags = _apply_round(dags, edges, nbr_idx, nbr_valid, impl)
+    sat = chunk_kernel.chunk_dedup(bstate.have, digest, impl=bank_impl)
+    bstate = bank_lib.chunk_step(
+        dags, bstate, digest, sat, sat, edges, cap_bytes, chunk_bytes
+    )
+    return dags, bstate
+
+
+def _bank_tick_block(dags, have, credit, sent, digest, edges, nbr_idx,
+                     nbr_valid, cap_bytes, chunk_bytes, impl, bank_impl):
+    """One shard's share of a bank-gossip tick (runs under ``shard_map``).
+
+    The DAG half is exactly ``_shard_round_block``; the bank half computes
+    the dedup reduction for its own receiver block and ALL-GATHERS the
+    resulting chunk-availability bitmaps — never payload bytes; the store
+    stays shared — so its block's transfer selection sees every sender's
+    effective availability, then updates only its block's presence/credit
+    rows. Bitwise-equal to the single-device tick: per-receiver arithmetic
+    over identical gathered operands.
+    """
+    rb = dags.publisher.shape[0]
+    off = jax.lax.axis_index(mesh_lib.NODES_AXIS) * rb
+    dags = _shard_round_block(dags, edges, nbr_idx, nbr_valid, impl)
+    bstate = BankState(have=have, credit=credit, sent=sent)
+    sat_blk = chunk_kernel.chunk_dedup(have, digest, impl=bank_impl)
+    sat_all = jax.lax.all_gather(
+        sat_blk, mesh_lib.NODES_AXIS, axis=0, tiled=True
+    )
+    edges_blk = jax.lax.dynamic_slice_in_dim(edges, off, rb, axis=0)
+    cap_blk = jax.lax.dynamic_slice_in_dim(cap_bytes, off, rb, axis=0)
+    bstate = bank_lib.chunk_step(
+        dags, bstate, digest, sat_all, sat_blk, edges_blk, cap_blk, chunk_bytes
+    )
+    return dags, bstate.have, bstate.credit, bstate.sent
+
+
+@functools.lru_cache(maxsize=None)
+def _shard_bank_tick(impl: str, bank_impl, mesh):
+    p_nodes, p_rep = P(mesh_lib.NODES_AXIS), P()
+    return shard_map(
+        functools.partial(_bank_tick_block, impl=impl, bank_impl=bank_impl),
+        mesh=mesh,
+        in_specs=(p_nodes, p_nodes, p_nodes, p_nodes,
+                  p_rep, p_rep, p_rep, p_rep, p_rep, p_rep),
+        out_specs=(p_nodes, p_nodes, p_nodes, p_nodes),
+        check_rep=False,
+    )
+
+
+def _bank_tick_for(impl: str, bank_impl, mesh):
+    """(dags, bstate, digest, edges, nbr_idx, nbr_valid, cap, chunk_bytes)
+    -> (dags, bstate) tick body; ``mesh=None`` is the single-device tick,
+    a mesh routes both halves through one ``shard_map``."""
+    if mesh is None:
+        return functools.partial(
+            _bank_tick_single, impl=impl, bank_impl=bank_impl
+        )
+    tick = _shard_bank_tick(impl, bank_impl, mesh)
+
+    def run(dags, bstate, digest, edges, nbr_idx, nbr_valid, cap_bytes,
+            chunk_bytes):
+        dags, have, credit, sent = tick(
+            dags, bstate.have, bstate.credit, bstate.sent, digest, edges,
+            nbr_idx, nbr_valid, cap_bytes, chunk_bytes,
+        )
+        return dags, BankState(have=have, credit=credit, sent=sent)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _advance_bank_jit(impl: str, bank_impl, mesh=None):
+    """Tick-batched advance with the bank gossiped: the same ONE-``lax.scan``
+    window as ``_advance_jit`` — same PRNG splits, same edge samples — with
+    the transport state threaded through the carry."""
+    tick = _bank_tick_for(impl, bank_impl, mesh)
+
+    def advance(dags, bstate, digest, key, ticks, part_active, adj, drop,
+                stride, part_mask, nbr_idx, nbr_valid, cap_bytes, chunk_bytes):
+        def body(carry, xs):
+            dags, bstate, key = carry
+            tick_i, pact = xs
+            key, sub = jax.random.split(key)
+            pm = jnp.where(pact, part_mask, True)
+            edges = _sample_edges(sub, tick_i, pm, adj, drop, stride)
+            dags, bstate = tick(dags, bstate, digest, edges, nbr_idx,
+                                nbr_valid, cap_bytes, chunk_bytes)
+            return (dags, bstate, key), None
+
+        (dags, bstate, key), _ = jax.lax.scan(
+            body, (dags, bstate, key), (ticks, part_active)
+        )
+        return dags, bstate, key
+
+    return jax.jit(advance)
+
+
+@functools.lru_cache(maxsize=None)
+def _converge_bank_jit(impl: str, bank_impl, mesh=None):
+    """Fixpoint flush with the bank gossiped: one ``lax.while_loop`` whose
+    predicate also demands every replica's referenced chunks have ARRIVED —
+    rows synced is no longer enough when payloads lag — and whose stall
+    check watches the transport state too (credit accrual on a pending link
+    is progress; a full stride cycle with nothing moving is a fixpoint)."""
+    tick = _bank_tick_for(impl, bank_impl, mesh)
+
+    def synced(dags, bstate, digest):
+        return replica_lib.replicas_synced(dags) & (
+            jnp.max(bank_lib.missing_chunks(dags, bstate, digest,
+                                            impl=bank_impl)) == 0
+        )
+
+    def converge(dags, bstate, digest, key, tick0, part_mask, adj, drop,
+                 stride, limit, stall_limit, nbr_idx, nbr_valid, cap_bytes,
+                 chunk_bytes):
+        def cond(carry):
+            dags, bstate, _key, _tick, stalled, done = carry
+            return (
+                ~synced(dags, bstate, digest)
+                & (done < limit)
+                & (stalled < stall_limit)
+            )
+
+        def body(carry):
+            dags, bstate, key, tick_i, stalled, done = carry
+            key, sub = jax.random.split(key)
+            edges = _sample_edges(sub, tick_i, part_mask, adj, drop, stride)
+            new, newb = tick(dags, bstate, digest, edges, nbr_idx, nbr_valid,
+                             cap_bytes, chunk_bytes)
+            still = trees_equal((new, newb), (dags, bstate))
+            stalled = jnp.where(still, stalled + 1, 0)
+            return (new, newb, key, tick_i + 1, stalled, done + 1)
+
+        dags, bstate, key, tick_i, _, done = jax.lax.while_loop(
+            cond, body,
+            (dags, bstate, key, tick0, jnp.int32(0), jnp.int32(0)),
+        )
+        return dags, bstate, key, tick_i, done, synced(dags, bstate, digest)
+
+    return jax.jit(converge)
+
+
 def make_gossip_round(impl: str = "fused", mesh=None):
     """(dags, edge_active) -> dags anti-entropy round (one jitted call).
 
@@ -403,6 +579,10 @@ def _converge_jit(impl: str, mesh=None):
     return jax.jit(converge)
 
 
+# commit accounting shares one trace across every network instance
+_bank_commit_jit = jax.jit(bank_lib.commit_chunks)
+
+
 def stride_matrix(top: Topology, sync_period: float, use_strides: bool = True) -> np.ndarray:
     """(N, N) int32 tick stride per link: a link with latency ℓ fires every
     ``ceil(ℓ / sync_period)`` ticks. ``use_strides=False`` (the ideal wire,
@@ -431,14 +611,50 @@ class GossipNetwork:
         cfg: GossipConfig = GossipConfig(),
         partition: Optional[PartitionSchedule] = None,
         mesh=None,
+        bank_cfg: Optional[BankGossipConfig] = None,
     ):
         n = top.num_nodes
         self.topology = top
         self.cfg = cfg
         self.partition = partition
         self.mesh = mesh
+        self.bank_cfg = bank_cfg
         # init_replicas validates the mesh and shards the receiver axis
         self.replicas = replica_lib.init_replicas(dag, bank, n, mesh=mesh)
+        if bank_cfg is not None:
+            c = bank_cfg.chunks_per_slot
+            slots = jax.tree_util.tree_leaves(bank)[0].shape[0]
+            slot_b = (bank_lib.slot_nbytes(bank) if bank_cfg.slot_bytes is None
+                      else float(bank_cfg.slot_bytes))
+            self._chunk_bytes = jnp.float32(max(slot_b / c, 1e-9))
+            self._digest = jax.jit(
+                bank_lib.bank_digests, static_argnames="chunks"
+            )(bank, chunks=c)
+            bstate = bank_lib.init_bank_state(n, slots, c)
+            # per-tick, per-directed-link byte budget: Table-I bits/s over
+            # one sync period. sync_period <= 0 is the ideal wire — payload
+            # transport is as free as metadata there, whatever `bandwidth`
+            # says (the PR-3 limit the equivalence tests pin).
+            if cfg.sync_period > 0:
+                cap = top.bandwidth / 8.0 * cfg.sync_period
+            else:
+                cap = np.where(top.adjacency, np.inf, 0.0)
+            # converge()'s tick bound must also cover DRAINING payloads: a
+            # full slot over the slowest finite link costs this many ticks
+            # (0 when every link is ideal or dead — rows alone bound those)
+            finite = cap[top.adjacency & np.isfinite(cap) & (cap > 0)]
+            self._drain_ticks = (
+                int(min(np.ceil(slot_b / float(finite.min())), 256))
+                if finite.size else 0
+            )
+            self._cap_bytes = jnp.asarray(cap, jnp.float32)
+            if mesh is not None:
+                bstate = mesh_lib.shard_replicas(bstate, mesh)
+                self._digest, self._cap_bytes = (
+                    mesh_lib.replicate(x, mesh)
+                    for x in (self._digest, self._cap_bytes)
+                )
+            self.replicas = self.replicas._replace(bank_state=bstate)
         stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
         self._max_stride = (
             int(stride[top.adjacency].max()) if top.adjacency.any() else 1
@@ -486,11 +702,66 @@ class GossipNetwork:
         if bank is not None:
             self.replicas = self.replicas._replace(bank=bank)
 
+    # --- bank transport (only when constructed with bank_cfg) ---------------
+
+    @property
+    def bank_state(self) -> Optional[BankState]:
+        return self.replicas.bank_state
+
+    def read_view(self, i) -> DagState:
+        """Node i's USABLE view: with the bank gossiped, rows whose model
+        chunks have not arrived are masked out (``bank.gate_view``) so
+        Algorithm 2 cannot select or approve a payload-less transaction;
+        without bank gossip this is exactly ``read`` (the PR-3 view)."""
+        dag = replica_lib.read_replica(self.replicas, i)
+        if self.bank_cfg is None:
+            return dag
+        return bank_lib.gate_view_jit(
+            dag, self.replicas.bank_state.have[i], self._digest
+        )
+
+    def bank_commit(self, node_id, slot, params) -> None:
+        """Account a stage-4 commit in the transport state: the committer
+        holds the new chunks, every other node's presence bits for the
+        (ring-reused) slot reset, and the digest row is re-derived."""
+        if self.bank_cfg is None:
+            return
+        bstate = self.replicas.bank_state
+        have, self._digest = _bank_commit_jit(
+            bstate.have, self._digest, params,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(node_id, jnp.int32),
+        )
+        self.replicas = self.replicas._replace(
+            bank_state=bstate._replace(have=have)
+        )
+
+    def missing_chunks(self) -> np.ndarray:
+        """(N,) referenced-but-unavailable chunks per node — the payload lag
+        behind row visibility (all zeros without bank gossip)."""
+        if self.bank_cfg is None:
+            return np.zeros(self.topology.num_nodes, np.int32)
+        return np.asarray(bank_lib.missing_chunks_jit(
+            self.replicas.dags, self.replicas.bank_state, self._digest,
+            impl=self.bank_cfg.impl,
+        ))
+
+    def bytes_sent(self) -> float:
+        """Total payload bytes delivered so far (the Table-I traffic bill)."""
+        if self.bank_cfg is None:
+            return 0.0
+        return float(jnp.sum(self.replicas.bank_state.sent))
+
     def union(self) -> DagState:
         return replica_lib.merge_all_jit(self.replicas.dags)
 
     def synced(self) -> bool:
-        return bool(replica_lib.replicas_synced_jit(self.replicas.dags))
+        """Fully converged: row-identical replicas AND — when the bank is
+        gossiped — every referenced model payload delivered (the same
+        predicate the bank-aware ``converge`` loop evaluates on device)."""
+        rows = bool(replica_lib.replicas_synced_jit(self.replicas.dags))
+        if self.bank_cfg is None:
+            return rows
+        return rows and int(self.missing_chunks().max()) == 0
 
     def missing_rows(self, union: Optional[DagState] = None) -> np.ndarray:
         """(N,) rows each replica lacks vs the union view (0 = converged).
@@ -510,13 +781,26 @@ class GossipNetwork:
 
     def _run_ticks(self, ticks, part_active) -> None:
         """Execute a batch of sync ticks as ONE jitted device call."""
-        dags, self._key = _advance_jit(self.cfg.impl, self.mesh)(
-            self.replicas.dags, self._key,
-            jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
-            self._adj, self._drop, self._stride, self._part_mask,
-            self._nbr_idx, self._nbr_valid,
-        )
-        self.replicas = self.replicas._replace(dags=dags)
+        if self.bank_cfg is not None:
+            dags, bstate, self._key = _advance_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.mesh
+            )(
+                self.replicas.dags, self.replicas.bank_state, self._digest,
+                self._key,
+                jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
+                self._adj, self._drop, self._stride, self._part_mask,
+                self._nbr_idx, self._nbr_valid,
+                self._cap_bytes, self._chunk_bytes,
+            )
+            self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
+        else:
+            dags, self._key = _advance_jit(self.cfg.impl, self.mesh)(
+                self.replicas.dags, self._key,
+                jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
+                self._adj, self._drop, self._stride, self._part_mask,
+                self._nbr_idx, self._nbr_valid,
+            )
+            self.replicas = self.replicas._replace(dags=dags)
         self.tick += len(ticks)
         self.rounds_run += len(ticks)
         self.device_calls += 1
@@ -562,12 +846,29 @@ class GossipNetwork:
         """
         limit = self.topology.num_nodes * min(self._max_stride, 64)
         stall_limit = min(self._max_stride, 64)
-        dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl, self.mesh)(
-            self.replicas.dags, self._key, jnp.asarray(self.tick, jnp.int32),
-            self._mask_at(at_time), self._adj, self._drop, self._stride,
-            limit, stall_limit, self._nbr_idx, self._nbr_valid,
-        )
-        self.replicas = self.replicas._replace(dags=dags)
+        if self.bank_cfg is not None:
+            # rows cross in <= num_nodes strided hops; chunks then drain at
+            # the per-link budget — extend the bound, keep the stall check
+            limit = (self.topology.num_nodes + self._drain_ticks) * min(
+                self._max_stride, 64
+            )
+            dags, bstate, self._key, tick, done, synced = _converge_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.mesh
+            )(
+                self.replicas.dags, self.replicas.bank_state, self._digest,
+                self._key, jnp.asarray(self.tick, jnp.int32),
+                self._mask_at(at_time), self._adj, self._drop, self._stride,
+                limit, stall_limit, self._nbr_idx, self._nbr_valid,
+                self._cap_bytes, self._chunk_bytes,
+            )
+            self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
+        else:
+            dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl, self.mesh)(
+                self.replicas.dags, self._key, jnp.asarray(self.tick, jnp.int32),
+                self._mask_at(at_time), self._adj, self._drop, self._stride,
+                limit, stall_limit, self._nbr_idx, self._nbr_valid,
+            )
+            self.replicas = self.replicas._replace(dags=dags)
         self.tick = int(tick)
         self.rounds_run += int(done)
         self.device_calls += 1

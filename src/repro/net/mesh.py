@@ -14,6 +14,15 @@ reduction over the gathered sender axis), reduces winners for its own
 receiver block, and writes back only its block. Any extra mesh axes (e.g. a
 ``model`` axis in a 2x4 mesh) are unused by gossip and simply replicate.
 
+With the model bank gossiped (``repro.net.bank``), the sharded tick gains a
+second, equally skinny collective: each shard dedups its own receivers'
+chunk presence and all-gathers the resulting availability BITMAPS — never
+payload bytes; the content-addressed store stays shared — then selects its
+block's transfers against the gathered sender availability. The per-node
+``BankState`` leaves (presence bitmap, link credit, byte meter) all lead
+with the receiver axis, so the same ``replica_specs`` placement rule shards
+them.
+
 ``make_gossip_mesh`` builds the canonical ("nodes", "model") mesh; on CPU
 runners the multi-device path needs
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (what the CI

@@ -9,14 +9,19 @@ leading receiver axis is also the scaling axis: ``init_replicas(mesh=...)``
 partitions it over a device mesh's "nodes" axis (``repro.net.mesh``), which
 is what lets R grow past one device's memory.
 
-The model bank stays SHARED across replicas: rows are allocated from a
+The model bank's PAYLOAD stays stored once: rows are allocated from a
 global publish sequence (``publish_local``), so a transaction occupies the
-same slot on every replica and its payload lives once in the bank. The bank
-thus stands in for a content-addressed model store (replicating N full model
-banks would multiply memory by N for no informational gain); what gossip
-actually propagates — and what the simulator measures — is row *visibility*:
-a replica that has not yet received a row never reads its bank slot, because
-tip selection only sees rows present in the local ``DagState``.
+same slot on every replica and its bytes live once in the bank — a
+content-addressed model store (replicating N full model banks would
+multiply memory by N for no informational gain). What gossip propagates is
+row *visibility* (a replica that has not received a row never reads its
+bank slot) and — when the network is built with a
+``bank.BankGossipConfig`` — per-node chunk *presence*: ``bank_state``
+stacks each node's chunk-availability bitmap and in-flight link budgets
+along the same leading replica axis, so payload transport is priced on the
+Table-I bandwidth model while the store itself is never duplicated
+(``repro.net.bank``). ``bank_state`` is None when the bank is not gossiped
+— the PR-3 behavior, bitwise.
 """
 from __future__ import annotations
 
@@ -34,6 +39,9 @@ from repro.kernels import ref as kernel_ref
 class ReplicaSet(NamedTuple):
     dags: DagState      # every leaf has leading axis (R, ...)
     bank: Any           # shared model bank (repro.core.bank pytree)
+    bank_state: Any = None   # per-node chunk transport (repro.net.bank
+                             # BankState, leading axis R) — None when the
+                             # bank is not gossiped
 
     @property
     def num_replicas(self) -> int:

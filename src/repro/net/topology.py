@@ -1,4 +1,4 @@
-"""Overlay topologies: neighbor masks plus per-link latency / drop matrices.
+"""Overlay topologies: neighbor masks plus per-link latency / drop / bandwidth.
 
 Every builder returns a ``Topology`` of dense host-side numpy arrays (the
 jitted gossip kernels lift them to device once):
@@ -6,10 +6,14 @@ jitted gossip kernels lift them to device once):
   adjacency  (N, N) bool   symmetric, zero diagonal
   latency    (N, N) f32    seconds per link; +inf off-link
   drop       (N, N) f32    per-message loss probability; 0 off-link
+  bandwidth  (N, N) f32    bits/s per link (Table-I B); +inf = ideal wire,
+                           0 off-link
 
-Latency and drop are drawn per *link* (symmetric), so a slow or lossy edge
-is slow in both directions — message loss itself is still sampled per
-directed message (see ``gossip._sample_edges``).
+Latency, drop, and bandwidth are drawn per *link* (symmetric), so a slow or
+lossy edge is slow in both directions — message loss itself is still
+sampled per directed message (see ``gossip._sample_edges``), and each
+direction of a link spends its own byte budget when the model bank is
+gossiped (``repro.net.bank``).
 """
 from __future__ import annotations
 
@@ -17,11 +21,23 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+# Table-I prices one model transfer at phi / B with B = 100 Mbit/s; the
+# sweep classes below bracket that wireless budget downward (the paper's
+# motivating "wireless and resource-limited" devices). Values are bits/s,
+# keyed the way benchmarks/examples report them.
+TABLE1_LINK_CLASSES = {
+    "ideal": float("inf"),          # the PR-3 limit: payloads travel free
+    "table1_100mbps": 100e6,        # Table I's B — campus WiFi / wired edge
+    "lte_10mbps": 10e6,             # one order down — loaded LTE uplink
+    "constrained_1mbps": 1e6,       # IoT-class uplink
+}
+
 
 class Topology(NamedTuple):
     adjacency: np.ndarray       # (N, N) bool
     latency: np.ndarray         # (N, N) f32, +inf where no link
     drop: np.ndarray            # (N, N) f32, 0 where no link
+    bandwidth: np.ndarray       # (N, N) f32 bits/s, +inf = ideal, 0 off-link
 
     @property
     def num_nodes(self) -> int:
@@ -37,6 +53,7 @@ def _finalize(
     latency_jitter: float,
     drop: float,
     seed: int,
+    bandwidth: float = float("inf"),
 ) -> Topology:
     n = adj.shape[0]
     adj = np.asarray(adj, bool).copy()
@@ -48,22 +65,24 @@ def _finalize(
     jitter = jitter + jitter.T                      # symmetric per-link draw
     latency = np.where(adj, link_latency + jitter, np.inf).astype(np.float32)
     drop_m = np.where(adj, float(drop), 0.0).astype(np.float32)
-    return Topology(adjacency=adj, latency=latency, drop=drop_m)
+    bw = np.where(adj, float(bandwidth), 0.0).astype(np.float32)
+    return Topology(adjacency=adj, latency=latency, drop=drop_m, bandwidth=bw)
 
 
 def ring(n: int, link_latency: float = 0.0, latency_jitter: float = 0.0,
-         drop: float = 0.0, seed: int = 0) -> Topology:
+         drop: float = 0.0, seed: int = 0,
+         bandwidth: float = float("inf")) -> Topology:
     """Cycle graph: node i ↔ i±1 (mod n). Diameter ⌊n/2⌋ — worst-case
     propagation, the stress topology for staleness experiments."""
     adj = np.zeros((n, n), bool)
     idx = np.arange(n)
     adj[idx, (idx + 1) % n] = True
-    return _finalize(adj, link_latency, latency_jitter, drop, seed)
+    return _finalize(adj, link_latency, latency_jitter, drop, seed, bandwidth=bandwidth)
 
 
 def k_regular(n: int, k: int, link_latency: float = 0.0,
               latency_jitter: float = 0.0, drop: float = 0.0,
-              seed: int = 0) -> Topology:
+              seed: int = 0, bandwidth: float = float("inf")) -> Topology:
     """Circulant k-regular graph: offsets ±1..±k//2, plus the antipode when
     k is odd (requires even n, the standard feasibility condition)."""
     if not 0 < k < n:
@@ -77,33 +96,34 @@ def k_regular(n: int, k: int, link_latency: float = 0.0,
         adj[idx, (idx - off) % n] = True
     if k % 2 == 1:
         adj[idx, (idx + n // 2) % n] = True
-    return _finalize(adj, link_latency, latency_jitter, drop, seed)
+    return _finalize(adj, link_latency, latency_jitter, drop, seed, bandwidth=bandwidth)
 
 
 def erdos_renyi(n: int, p: float, link_latency: float = 0.0,
                 latency_jitter: float = 0.0, drop: float = 0.0,
-                seed: int = 0) -> Topology:
+                seed: int = 0, bandwidth: float = float("inf")) -> Topology:
     """G(n, p) random overlay. May be disconnected — that is a feature
     (natural partitions); check with ``is_connected`` / ``components``."""
     rng = np.random.default_rng(seed)
     upper = np.triu(rng.uniform(size=(n, n)) < p, 1)
-    return _finalize(upper, link_latency, latency_jitter, drop, seed + 1)
+    return _finalize(upper, link_latency, latency_jitter, drop, seed + 1, bandwidth=bandwidth)
 
 
 def star(n: int, hub: int = 0, link_latency: float = 0.0,
          latency_jitter: float = 0.0, drop: float = 0.0,
-         seed: int = 0) -> Topology:
+         seed: int = 0, bandwidth: float = float("inf")) -> Topology:
     """Hub-and-spoke: every node ↔ ``hub``. Diameter 2, but the hub is a
     single point of failure — partitioning it isolates every spoke."""
     adj = np.zeros((n, n), bool)
     adj[hub, :] = True
-    return _finalize(adj, link_latency, latency_jitter, drop, seed)
+    return _finalize(adj, link_latency, latency_jitter, drop, seed, bandwidth=bandwidth)
 
 
 def full(n: int, link_latency: float = 0.0, latency_jitter: float = 0.0,
-         drop: float = 0.0, seed: int = 0) -> Topology:
+         drop: float = 0.0, seed: int = 0,
+         bandwidth: float = float("inf")) -> Topology:
     """Complete graph — the shared-ledger limit of the overlay."""
-    return _finalize(np.ones((n, n), bool), link_latency, latency_jitter, drop, seed)
+    return _finalize(np.ones((n, n), bool), link_latency, latency_jitter, drop, seed, bandwidth=bandwidth)
 
 
 def neighbor_table(adjacency: np.ndarray):
