@@ -19,7 +19,10 @@ Accuracy sweeps (claims validated at bench scale):
 
 ``python -m benchmarks.gossip_propagation --smoke`` runs a reduced grid and
 FAILS (exit 1) if the fused round loses bitwise equivalence with the scan
-round or drops below a 2x speedup — the CI perf tripwire.
+round, drops below a 2x speedup, the mesh round diverges from the fused
+one, bank gossip at unlimited capacity diverges from the bankless path, or
+the event engine's degenerate uniform-delay limit diverges from the tick
+path — the CI tripwires.
 """
 import argparse
 import json
@@ -216,6 +219,22 @@ def run_dispatch_batching(
 # ---------------------------------------------------------------------------
 
 
+def _results_bitwise_equal(a, b) -> bool:
+    """End-to-end bitwise equality of two SimResults — accuracy curve,
+    timing, and every field of the union ledger. THE equivalence rule the
+    bank-gossip and event-engine CI tripwires share; change it here and
+    both smoke checks change together."""
+    return (
+        np.array_equal(a.accs, b.accs)
+        and np.array_equal(a.times, b.times)
+        and all(
+            np.array_equal(np.asarray(getattr(a.extras["dag"], f)),
+                           np.asarray(getattr(b.extras["dag"], f)))
+            for f in a.extras["dag"]._fields
+        )
+    )
+
+
 def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg):
     dcfg = default_dagfl_config(num_nodes=n)
     sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
@@ -253,15 +272,7 @@ def run_bank_gossip(
             n, iterations, seed, impl, float("inf"),
             BankGossipConfig(chunks_per_slot=4),
         )
-        equivalent = (
-            np.array_equal(base.accs, banked.accs)
-            and np.array_equal(base.times, banked.times)
-            and all(
-                np.array_equal(np.asarray(getattr(base.extras["dag"], f)),
-                               np.asarray(getattr(banked.extras["dag"], f)))
-                for f in base.extras["dag"]._fields
-            )
-        )
+        equivalent = _results_bitwise_equal(base, banked)
         emit(
             f"gossip/bank_gossip/equivalence/{impl}", float(equivalent),
             f"bitwise_equal_unbanked={equivalent};"
@@ -298,6 +309,134 @@ def run_bank_gossip(
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Event engine: tick-limit equivalence + the continuous-time payoff
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(n, iterations, seed, impl, engine, link_latency):
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
+                    seed=seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=seed)
+    return run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.ring(n, link_latency=link_latency, seed=seed),
+        gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed, impl=impl),
+        engine=engine,
+    )
+
+
+def run_event_engine(
+    n: int = 8, iterations: int = 12, seed: int = 0,
+    impls=("fused", "scan"), insystem_horizon: float = 2000.0,
+    record: dict = None,
+):
+    """Continuous-time event engine (``repro.net.events``) measurements.
+
+    Three claims, machine-checked into ``BENCH_gossip_sync.json``:
+
+    * EQUIVALENCE (the CI tripwire): with a uniform deterministic per-edge
+      delay equal to the sync period, ``engine="events"`` is bitwise the
+      ``engine="ticks"`` fused path end to end — identical accuracy curve,
+      timing, and union ledger — for every round impl;
+    * PROPAGATION: on an overlay whose links are FASTER than the tick
+      (latency 0.3 s, period 1 s), the event engine syncs a published row
+      in per-hop latency time while the stride model waits for whole ticks
+      — the measured full-sync times are reported side by side;
+    * IN-SYSTEM Eq. (4): the §IV tip equilibrium measured inside the full
+      gossip system lands near ``stability.equilibrium_tips`` (the full
+      bench-grid comparison is ``benchmarks/stability_tips.py``; this row
+      is the compact JSON copy).
+    """
+    from repro.core import stability
+    from repro.net.events import simulate_insystem_tips
+
+    rows = []
+    for impl in impls:
+        base = _run_engine(n, iterations, seed, impl, "ticks", 1.0)
+        ev = _run_engine(n, iterations, seed, impl, "events", 1.0)
+        equivalent = _results_bitwise_equal(base, ev)
+        emit(
+            f"gossip/event_engine/equivalence/{impl}", float(equivalent),
+            f"bitwise_equal_ticks={equivalent};"
+            f"event_batches={ev.extras['events_processed']}",
+        )
+        rows.append(dict(
+            kind="equivalence", impl=impl, n=n, iterations=iterations,
+            bitwise_equal_ticks=bool(equivalent),
+            event_batches=int(ev.extras["events_processed"]),
+        ))
+
+    # propagation: one row crossing a 12-node ring of 0.3 s links
+    def _sync_time(engine):
+        m = 12
+        d = dag_lib.empty_dag(32, 2, m + 1)
+        d = dag_lib.publish(
+            d, jnp.asarray(m, jnp.int32), jnp.float32(0.0),
+            jnp.full((2,), dag_lib.NO_TX, jnp.int32), jnp.float32(0.5),
+            jnp.float32(0.0), jnp.asarray(0, jnp.int32),
+        )
+        net = gossip_lib.GossipNetwork(
+            d, bank=jnp.zeros((32, 4)),
+            top=topo.ring(m, link_latency=0.3, seed=seed),
+            cfg=gossip_lib.GossipConfig(sync_period=1.0, seed=seed,
+                                        engine=engine),
+        )
+        di = replica_lib.publish_local(
+            net.read(0), 1, jnp.asarray(0, jnp.int32), jnp.float32(0.05),
+            jnp.full((2,), dag_lib.NO_TX, jnp.int32), jnp.float32(0.5),
+            jnp.float32(0.0), jnp.asarray(1, jnp.int32),
+        )
+        net.write(0, di)
+        t = 0.0
+        while not net.synced() and t < 30.0:
+            t = round(t + 0.1, 10)
+            net.advance(t)
+        if not net.synced():      # never report the timeout as a sync time
+            raise RuntimeError(f"engine={engine} failed to sync within 30 s")
+        return t
+
+    t_ticks, t_events = _sync_time("ticks"), _sync_time("events")
+    emit(
+        "gossip/event_engine/full_sync_time", t_events,
+        f"events_s={t_events:.1f};ticks_s={t_ticks:.1f};"
+        f"speedup={t_ticks / max(t_events, 1e-9):.2f}",
+    )
+    rows.append(dict(
+        kind="propagation", link_latency_s=0.3, sync_period_s=1.0,
+        full_sync_s_events=t_events, full_sync_s_ticks=t_ticks,
+    ))
+
+    if insystem_horizon > 0:
+        # bench-grid parameters (benchmarks/stability_tips.py): horizons
+        # shorter than ~2000 leave too much tail noise for the 15% band
+        cfg = default_dagfl_config(num_nodes=16)
+        f = 1.5e9
+        pred = stability.equilibrium_tips(cfg, f)
+        tr = simulate_insystem_tips(
+            topo.full(16), h=stability.iteration_delay(cfg, f),
+            arrival_rate=cfg.arrival_rate, k=cfg.k, tau_max=cfg.tau_max,
+            horizon=insystem_horizon, capacity=256, seed=seed,
+            sync_period=0.05,
+        )
+        ins = tr.tail_mean(0.5)
+        rel = abs(ins - pred) / pred
+        emit(
+            "gossip/event_engine/insystem_eq4", ins,
+            f"L0_pred={pred:.2f};rel_err={rel:.3f};published={tr.published}",
+        )
+        rows.append(dict(
+            kind="insystem_eq4", k=cfg.k, horizon=insystem_horizon,
+            L0_pred=float(pred), L0_insystem=float(ins),
+            rel_err=float(rel), published=int(tr.published),
+            overflow=int(tr.overflow),
+        ))
+    if record is not None:
+        record["event_engine"] = rows
+    return rows
+
+
 def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
     record = dict(record, schema="gossip_sync_bench_v1", backend=jax.default_backend())
     with open(path, "w") as f:
@@ -307,14 +446,16 @@ def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
 
 def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     """Everything BENCH_gossip_sync.json carries: the fast-path grid, the
-    sharded round, dispatch batching, and the bank-gossip equivalence +
-    bandwidth sweep (no accuracy sweeps)."""
+    sharded round, dispatch batching, the bank-gossip equivalence +
+    bandwidth sweep, and the event-engine equivalence + continuous-time
+    rows (no accuracy sweeps)."""
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
     run_sharded_sync(record=record)
     run_dispatch_batching(record=record)
     run_bank_gossip(record=record)
+    run_event_engine(record=record)
     if own:
         write_bench_json(record, json_path)
     return record
@@ -386,6 +527,7 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
     run_dispatch_batching(iterations=iterations, num_nodes=num_nodes, seed=seed,
                           record=record)
     run_bank_gossip(seed=seed, record=record)
+    run_event_engine(seed=seed, record=record)
     write_bench_json(record, json_path)
     run_sweep(iterations=iterations, num_nodes=num_nodes, seed=seed)
     run_partition(iterations=iterations, num_nodes=num_nodes, seed=seed)
@@ -394,9 +536,10 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
 def smoke(json_path: str = JSON_PATH) -> int:
     """CI tripwire: reduced grid; fail on lost scan/fused equivalence, a
     < 2x speedup, a mesh-sharded round that diverges from the single-device
-    fused round (when >1 device is visible — the 8-device CI lane), or a
+    fused round (when >1 device is visible — the 8-device CI lane), a
     bank-gossip run at unlimited capacity that is no longer bitwise the
-    bankless PR-3 path.
+    bankless PR-3 path, or an event-engine run in the degenerate
+    uniform-delay limit that is no longer bitwise the tick path.
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -407,6 +550,10 @@ def smoke(json_path: str = JSON_PATH) -> int:
     )
     sharded_rows = run_sharded_sync(reps=5, record=record)
     bank_rows = run_bank_gossip(n=8, iterations=10, record=record)
+    event_rows = run_event_engine(
+        n=6, iterations=8, impls=("fused",), insystem_horizon=0.0,
+        record=record,
+    )
     write_bench_json(record, json_path)
     ok = True
     for row in rows:
@@ -430,6 +577,14 @@ def smoke(json_path: str = JSON_PATH) -> int:
             ok = False
     if not any(r["kind"] == "equivalence" for r in bank_rows):
         print("# SMOKE FAIL: no bank-gossip equivalence rows recorded")
+        ok = False
+    for row in event_rows:
+        if row["kind"] == "equivalence" and not row["bitwise_equal_ticks"]:
+            print(f"# SMOKE FAIL: event engine in the uniform-delay limit "
+                  f"diverged from the tick path: {row}")
+            ok = False
+    if not any(r["kind"] == "equivalence" for r in event_rows):
+        print("# SMOKE FAIL: no event-engine equivalence rows recorded")
         ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1

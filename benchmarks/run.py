@@ -64,6 +64,12 @@ def main() -> None:
         # sync fast path: impl x N x cap round grid + dispatch batching,
         # written to BENCH_gossip_sync.json
         ("gossip_sync", lambda: gossip_propagation.run_sync_bench()),
+        # continuous-time event engine: tick-limit equivalence, per-edge
+        # latency propagation, in-system Eq. (4). Already part of
+        # gossip_sync — the standalone entry exists only for targeted
+        # --only runs, so a default full run doesn't execute it twice.
+        *([("event_engine", lambda: gossip_propagation.run_event_engine())]
+          if args.only else []),
         ("gossip", lambda: (
             gossip_propagation.run_sweep(iters_mid),
             gossip_propagation.run_partition(iters_mid),

@@ -10,7 +10,7 @@ per-iteration delay h = d0 + d1 from the Table-I constants (Eqs. 5-7).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -37,12 +37,28 @@ def transmission_delay(cfg: DagFLConfig) -> float:
     return cfg.tx_size_bits / cfg.bandwidth
 
 
-def equilibrium_tips(cfg: DagFLConfig, f: float = None) -> float:
+def equilibrium_tips(cfg: DagFLConfig, f: Optional[float] = None) -> float:
     """Eq. (8): L0 = k*lambda*(eta0*phi0*beta + eta1*phi1*alpha) / ((k-1)*f)."""
     if f is None:
         f = 0.5 * (cfg.cpu_freq_range[0] + cfg.cpu_freq_range[1])
     h = iteration_delay(cfg, f)
     return cfg.k * cfg.arrival_rate * h / (cfg.k - 1)
+
+
+def tail_mean(tips: np.ndarray, frac: float = 0.5) -> float:
+    """Mean over the trailing ``frac`` of samples (equilibrium estimate).
+
+    ``n`` is clamped to >= 1: a short trace (``len * frac < 1``) degrades
+    to the last sample instead of ``tips[-0:]`` silently averaging the
+    WHOLE trace, and an empty trace is NaN rather than a numpy warning.
+    Shared by ``TipTrace`` (the standalone sim) and
+    ``repro.net.events.InSystemTrace`` (the in-system sim) so the two
+    equilibrium estimates use one rule.
+    """
+    if len(tips) == 0:
+        return float("nan")
+    n = max(int(len(tips) * frac), 1)
+    return float(np.mean(tips[-n:]))
 
 
 @dataclass
@@ -51,15 +67,14 @@ class TipTrace:
     tips: np.ndarray
 
     def tail_mean(self, frac: float = 0.5) -> float:
-        n = int(len(self.tips) * frac)
-        return float(np.mean(self.tips[-n:]))
+        return tail_mean(self.tips, frac)
 
 
 def simulate_tip_count(
     cfg: DagFLConfig,
     horizon: float = 2000.0,
     seed: int = 0,
-    f: float = None,
+    f: Optional[float] = None,
 ) -> TipTrace:
     """Event-driven M/G/inf-style simulation of the tip population.
 

@@ -33,16 +33,33 @@ class LatencyModel:
         return cls(cfg=cfg, freqs=rng.uniform(lo, hi, cfg.num_nodes))
 
     # --- Eq. (5)-(7) ------------------------------------------------------
-    def d0(self, node: int) -> float:
+    def _train_cycles(self) -> float:
         c = self.cfg
-        return c.train_density * c.minibatch_size_bits * c.beta / self.freqs[node]
+        return c.train_density * c.minibatch_size_bits * c.beta
+
+    def _validate_cycles(self) -> float:
+        c = self.cfg
+        return c.validate_density * c.valset_size_bits * c.alpha
+
+    def d0(self, node: int) -> float:
+        return self._train_cycles() / self.freqs[node]
 
     def d1(self, node: int) -> float:
-        c = self.cfg
-        return c.validate_density * c.valset_size_bits * c.alpha / self.freqs[node]
+        return self._validate_cycles() / self.freqs[node]
 
     def h(self, node: int) -> float:
         return self.d0(node) + self.d1(node)
+
+    def h_all(self) -> np.ndarray:
+        """(N,) per-node Eq. (7) iteration delay h_i = d0_i + d1_i.
+
+        The vector the continuous-time engine schedules completion events
+        from (``repro.net.events.simulate_insystem_tips``): heterogeneous
+        ``freqs`` make the low-frequency tail the §IV stragglers.
+        Divides before summing so ``h_all()[i]`` is bitwise ``h(i)``.
+        """
+        return (self._train_cycles() / self.freqs
+                + self._validate_cycles() / self.freqs)
 
     def tx_time(self) -> float:
         return self.cfg.tx_size_bits / self.cfg.bandwidth

@@ -16,6 +16,7 @@ what makes its rounds the slowest (Table II).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import heapq
 from dataclasses import dataclass, field
@@ -391,6 +392,7 @@ class _GossipLedger:
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
             "device_calls": self.net.device_calls,
+            "events_processed": self.net.events_processed,
             "synced_final": self.net.synced(),
             "missing_rows_final": self.net.missing_rows(union),
             # duplicate-approval deficit: credits issued by committers vs
@@ -416,6 +418,7 @@ def run_dagfl_gossip(
     partition: Optional[gossip_lib.PartitionSchedule] = None,
     mesh=None,
     bank_gossip: Optional[BankGossipConfig] = None,
+    engine: Optional[str] = None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -441,11 +444,21 @@ def run_dagfl_gossip(
     is deterministic and leaves the PRNG stream untouched); with Table-I
     budgets, time-to-model-availability (``extras["bank_lag_curve"]``) and
     the byte bill (``extras["bank_bytes_sent"]``) become measurable.
+
+    ``engine`` overrides the transport clock (``GossipConfig.engine``):
+    "ticks" is the quantized stride model (the default, bitwise what it
+    was); "events" runs the continuous-time engine (``repro.net.events``)
+    — sync messages cross each link at its ACTUAL latency and bank chunks
+    drain at whole-chunk completion instants. With a uniform per-edge
+    delay equal to the sync period the two engines are bitwise identical
+    (CI-enforced); heterogeneous latencies make the difference measurable.
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
     if gossip is None:
         gossip = gossip_lib.GossipConfig(sync_period=1.0, seed=sim.seed)
+    if engine is not None:
+        gossip = dataclasses.replace(gossip, engine=engine)
     return _run_dagfl_events(
         task, nodes, dcfg, sim, global_val, weighted,
         lambda state, commit_fn: _GossipLedger(

@@ -2,6 +2,7 @@ from repro.kernels import ops, ref
 from repro.kernels.ops import (
     chunk_dedup,
     decode_attention,
+    event_pop,
     fedavg,
     flash_attention,
     gossip_winner,
@@ -13,6 +14,7 @@ __all__ = [
     "ref",
     "chunk_dedup",
     "decode_attention",
+    "event_pop",
     "fedavg",
     "flash_attention",
     "gossip_winner",

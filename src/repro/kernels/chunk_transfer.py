@@ -21,14 +21,17 @@ Two layers, array-level on purpose (no ``DagState``/pytree types here):
                        as the pure-lax oracle/CPU fast path — the same
                        dispatch pattern as ``gossip_winner``.
 
-``transfer_select``    per receiver, assign each still-needed chunk to its
-                       lowest-indexed active neighbor that has the content,
-                       then admit chunks per link in canonical (slot, chunk)
-                       order until the link's whole-chunk budget runs out.
-                       Pure lax; deterministic (no sampling), so the bank
-                       tick never touches the PRNG stream and the gossip
-                       round stays bitwise-identical with bank gossip
-                       enabled under infinite bandwidth.
+``transfer_select``    per receiver, STRIPE the still-needed chunks across
+                       the active neighbors that have the content (chunk m
+                       goes to the (m mod holders)-th lowest-indexed active
+                       holder, so parallel links to distinct holders drain
+                       distinct chunks instead of idling behind the lowest
+                       index), then admit chunks per link in canonical
+                       (slot, chunk) order until the link's whole-chunk
+                       budget runs out. Pure lax; deterministic (no
+                       sampling), so the bank tick never touches the PRNG
+                       stream and the gossip round stays bitwise-identical
+                       with bank gossip enabled under infinite bandwidth.
 
 Equivalence pallas-vs-ref is property-tested in ``tests/test_net_bank.py``.
 """
@@ -123,13 +126,18 @@ def transfer_select(
 ):
     """One tick of bandwidth-limited chunk transfers (pure lax, no PRNG).
 
-    Each needed chunk is assigned to the LOWEST-indexed active sender whose
-    effective availability covers it (deterministic — merge ties in the
-    gossip round break the same way); each link then admits its assigned
-    chunks in ascending flat (slot, chunk) order until ``afford`` whole
-    chunks have been spent. ``Rb`` may be a mesh shard's receiver block
-    reduced against the all-gathered availability bitmaps — per-receiver
-    arithmetic only, so the sharded tick is bitwise the single-device one.
+    Needed chunks are STRIPED across the active senders whose effective
+    availability covers them: chunk ``m`` is assigned to the
+    ``(m mod holders)``-th lowest-indexed active holder, so when several
+    neighbors hold the same content their links drain disjoint chunk sets
+    in parallel instead of every chunk queueing behind the lowest-indexed
+    holder. A single holder degenerates to exactly the lowest-index rule
+    (deterministic — merge ties in the gossip round break the same way).
+    Each link then admits its assigned chunks in ascending flat
+    (slot, chunk) order until ``afford`` whole chunks have been spent.
+    ``Rb`` may be a mesh shard's receiver block reduced against the
+    all-gathered availability bitmaps — per-receiver arithmetic only, so
+    the sharded tick is bitwise the single-device one.
 
     Returns ``(take (Rb, M) bool, spent (Rb, R) i32 chunks moved per link,
     pending (Rb, R) bool — link had assigned work left over)``.
@@ -137,9 +145,16 @@ def transfer_select(
     rb, m = need.shape
     r = src_have.shape[0]
     can = edge_active[:, :, None] & need[:, None, :] & src_have[None, :, :]
-    idx = jnp.arange(r, dtype=jnp.int32)[None, :, None]
-    sender = jnp.min(jnp.where(can, idx, r), axis=1)         # (Rb, M); r = none
-    assigned = can & (idx == sender[:, None, :])             # (Rb, R, M)
+    # stripe: among a chunk's active holders (ranked by sender index), pick
+    # the (chunk index mod holder count)-th — distinct chunks spread over
+    # distinct links, and afford admission below stays per-link
+    holder_rank = jnp.cumsum(can.astype(jnp.int32), axis=1) - 1   # (Rb, R, M)
+    holders = jnp.sum(can.astype(jnp.int32), axis=1)              # (Rb, M)
+    chunk_idx = jnp.arange(m, dtype=jnp.int32)[None, :]
+    pick = jnp.where(
+        holders > 0, jnp.mod(chunk_idx, jnp.maximum(holders, 1)), -1
+    )
+    assigned = can & (holder_rank == pick[:, None, :])            # (Rb, R, M)
     rank = jnp.cumsum(assigned.astype(jnp.int32), axis=2) - 1
     take_link = assigned & (rank < afford[:, :, None])
     take = jnp.any(take_link, axis=1)

@@ -1,0 +1,133 @@
+"""Pallas kernel: masked lexicographic argmin over the event queue.
+
+The continuous-time hot spot (``repro.net.events``): every iteration of the
+device-resident event loop must find the next event to fire — the valid
+queue slot with the smallest ``(time, kind, seq)`` key. That is the
+``gossip_merge`` reduction with min in place of max: a masked lexicographic
+reduction over one axis, no data-dependent shapes, so the whole horizon
+stays inside one jitted ``lax.while_loop``.
+
+The kernel tiles the queue into ``(1, block_q)`` slabs — grid step ``b``
+reduces its slab to a local ``(time, kind, seq, idx)`` best and folds it
+into a running best held in the output refs (TPU grid steps execute
+sequentially, the same accumulation pattern as the flash-attention
+running-max). ``repro.kernels.ref.event_pop_ref`` is the pure-lax
+oracle/CPU fast path; equivalence is property-tested in
+``tests/test_net_events.py``. On this CPU container ``interpret=True``
+drives the kernel through the Pallas interpreter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+BLOCK_Q = 512   # 4 x (1, 512) i32/f32 slabs per step: ~8 KiB VMEM
+
+
+def _pop_kernel(t_ref, k_ref, s_ref, v_ref, bt_ref, ba_ref):
+    # t/k/s/v_ref: (1, bq) — this step's queue slab (time, kind, seq, valid)
+    # bt_ref: (1, 1) f32 running best time; ba_ref: (1, 3) i32 running best
+    # (kind, seq, global idx) — every grid step maps to the same output
+    # block, so the fold accumulates across the sequential grid.
+    b = pl.program_id(0)
+    bq = t_ref.shape[1]
+    imax = jnp.iinfo(jnp.int32).max
+    v = v_ref[...] != 0
+    t = jnp.where(v, t_ref[...], jnp.inf)
+    bt = jnp.min(t)
+    tie = v & (t == bt)
+    kk = jnp.where(tie, k_ref[...], imax)
+    bk = jnp.min(kk)
+    tie = tie & (kk == bk)
+    ss = jnp.where(tie, s_ref[...], imax)
+    bs = jnp.min(ss)
+    tie = tie & (ss == bs)
+    iota = jax.lax.broadcasted_iota(jnp.int32, tie.shape, 1)
+    bi = jnp.min(jnp.where(tie, iota, imax))
+    bi = jnp.where(bi == imax, imax, bi + b * bq)   # imax = empty sentinel
+
+    @pl.when(b == 0)
+    def _init():
+        bt_ref[0, 0] = jnp.inf
+        ba_ref[0, 0] = imax
+        ba_ref[0, 1] = imax
+        ba_ref[0, 2] = imax
+
+    ct, ck, cs = bt_ref[0, 0], ba_ref[0, 0], ba_ref[0, 1]
+    better = (bt < ct) | (
+        (bt == ct) & ((bk < ck) | ((bk == ck) & (bs < cs)))
+    )
+    bt_ref[0, 0] = jnp.where(better, bt, ct)
+    ba_ref[0, 0] = jnp.where(better, bk, ck)
+    ba_ref[0, 1] = jnp.where(better, bs, cs)
+    ba_ref[0, 2] = jnp.where(better, bi, ba_ref[0, 2])
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def event_pop_pallas(
+    time: jnp.ndarray,      # (Q,) f32
+    kind: jnp.ndarray,      # (Q,) i32
+    seq: jnp.ndarray,       # (Q,) i32
+    valid: jnp.ndarray,     # (Q,) bool
+    block_q: int = BLOCK_Q,
+    interpret: bool = True,
+):
+    """(idx () i32, found () bool) — the queue-head reduction as a kernel.
+
+    Padding slots arrive invalid (they can never win); an all-invalid queue
+    leaves the idx sentinel untouched, which the wrapper folds into
+    ``found`` so the outputs are bitwise ``ref.event_pop_ref``.
+    """
+    q = time.shape[0]
+    bq = min(block_q, q) if q else block_q
+    pad = (-q) % bq
+    nb = (q + pad) // bq
+    t = jnp.pad(jnp.asarray(time, jnp.float32), (0, pad),
+                constant_values=jnp.inf).reshape(nb, bq)
+    k = jnp.pad(jnp.asarray(kind, jnp.int32), (0, pad)).reshape(nb, bq)
+    s = jnp.pad(jnp.asarray(seq, jnp.int32), (0, pad)).reshape(nb, bq)
+    v = jnp.pad(jnp.asarray(valid, jnp.int32), (0, pad)).reshape(nb, bq)
+
+    _, ba = pl.pallas_call(
+        _pop_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, bq), lambda b: (b, 0)) for _ in range(4)],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+            pl.BlockSpec((1, 3), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 3), jnp.int32),
+        ],
+        interpret=interpret,
+    )(t, k, s, v)
+    found = ba[0, 2] != jnp.iinfo(jnp.int32).max
+    idx = jnp.where(found, jnp.minimum(ba[0, 2], max(q - 1, 0)), 0)
+    return idx.astype(jnp.int32), found
+
+
+def event_pop(time, kind, seq, valid, impl: Optional[str] = None,
+              block_q: int = BLOCK_Q, interpret: Optional[bool] = None):
+    """Queue-head selection with backend dispatch.
+
+    ``impl``: "pallas" forces the kernel (interpreted off-TPU), "lax" the
+    pure-lax oracle; None picks pallas on TPU, lax elsewhere — the same
+    rule as ``gossip_merge.gossip_winner``.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    if impl == "lax":
+        return ref.event_pop_ref(time, kind, seq, valid)
+    if impl != "pallas":
+        raise ValueError(f"unknown event_pop impl: {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return event_pop_pallas(time, kind, seq, valid,
+                            block_q=block_q, interpret=interpret)

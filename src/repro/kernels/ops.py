@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.chunk_transfer import chunk_dedup, transfer_select
+from repro.kernels.event_pop import event_pop
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
 from repro.kernels.gossip_merge import gossip_winner, gossip_winner_nbr
@@ -54,5 +55,5 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
 __all__ = [
     "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
     "gossip_winner", "gossip_winner_nbr", "chunk_dedup", "transfer_select",
-    "ref",
+    "event_pop", "ref",
 ]

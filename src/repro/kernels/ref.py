@@ -62,6 +62,36 @@ def gossip_winner_ref(
     return src.astype(jnp.int32), ac.astype(jnp.int32)
 
 
+def event_pop_ref(
+    time: jnp.ndarray,      # (Q,) f32 event fire times (finite on valid slots)
+    kind: jnp.ndarray,      # (Q,) i32 event kind (repro.net.events ordering)
+    seq: jnp.ndarray,       # (Q,) i32 insertion order (tie-break)
+    valid: jnp.ndarray,     # (Q,) bool slot occupancy mask
+):
+    """Earliest-event selection for the continuous-time engine (oracle + CPU
+    fast path).
+
+    The head of a ``repro.net.events.EventQueue`` is the valid slot with the
+    lexicographically smallest ``(time, kind, seq)`` key — kind orders
+    simultaneous events (deliveries merge before drains settle before
+    publishes land before starts read, mirroring the tick driver's intra-tick
+    order) and ``seq`` makes ties deterministic. The masked argmin is the
+    ``gossip_winner`` reduction with min in place of max.
+
+    Returns ``(idx () i32, found () bool)``; ``idx`` is 0 when nothing is
+    valid (callers gate on ``found``).
+    """
+    valid = jnp.asarray(valid, bool)
+    imax = jnp.iinfo(jnp.int32).max
+    t = jnp.where(valid, time, jnp.inf)
+    tie = valid & (t == jnp.min(t))
+    kk = jnp.where(tie, kind, imax)
+    tie = tie & (kk == jnp.min(kk))
+    ss = jnp.where(tie, seq, imax)
+    tie = tie & (ss == jnp.min(ss))
+    return jnp.argmax(tie).astype(jnp.int32), jnp.any(valid)
+
+
 def chunk_dedup_ref(
     have: jnp.ndarray,      # (R, S, C) bool — physical chunk presence per node
     digest: jnp.ndarray,    # (S, C) f32 — content digest of every store chunk

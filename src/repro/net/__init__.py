@@ -33,6 +33,16 @@ supplies the missing network layer:
                 collective gather of sender rows (``shard_map`` body in
                 ``gossip``) — bitwise-equal to the single-device round.
 
+  ``events``    continuous-time event engine: a fixed-capacity event queue
+                as stacked arrays popped by a masked lexicographic argmin
+                (``repro.kernels.event_pop``), advanced by ONE jitted
+                ``lax.while_loop`` — per-edge deliveries at the link's
+                actual latency (replacing stride quantization), bank
+                chunk-drain completions, and the §IV in-system Eq. (4)
+                tip simulation (``simulate_insystem_tips``). Selected via
+                ``GossipConfig(engine="events")``; its uniform-delay
+                degenerate limit is bitwise the tick engine.
+
   ``bank``      priced model-payload transport: per-node chunk-availability
                 bitmaps over ONE content-addressed store, content dedup
                 (``repro.kernels.chunk_transfer``), per-link Table-I byte
@@ -47,16 +57,18 @@ events so tip staleness, duplicate approvals across stale views, and
 partition/heal convergence become measurable against the shared-ledger
 baseline.
 """
-from repro.net import bank, gossip, mesh, replica, topology
+from repro.net import bank, events, gossip, mesh, replica, topology
 from repro.net.bank import BankGossipConfig, BankState
+from repro.net.events import EventQueue, simulate_insystem_tips
 from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
 from repro.net.mesh import make_gossip_mesh
 from repro.net.replica import ReplicaSet
 from repro.net.topology import Topology
 
 __all__ = [
-    "bank", "gossip", "mesh", "replica", "topology",
-    "BankGossipConfig", "BankState",
+    "bank", "events", "gossip", "mesh", "replica", "topology",
+    "BankGossipConfig", "BankState", "EventQueue",
     "GossipConfig", "GossipNetwork", "PartitionSchedule",
     "ReplicaSet", "Topology", "make_gossip_mesh",
+    "simulate_insystem_tips",
 ]

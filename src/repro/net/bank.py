@@ -188,13 +188,20 @@ def chunk_step(
     edges: jnp.ndarray,        # (Rb, R) bool active directed edges
     cap_bytes: jnp.ndarray,    # (Rb, R) f32 per-link budget this tick
     chunk_bytes,               # () f32 transfer granule
-) -> BankState:
+    return_pending: bool = False,
+):
     """One tick of priced chunk movement for a receiver block.
 
     Single-device calls pass the full axes (``sat_blk is sat_all``); a mesh
     shard passes its receiver block against the all-gathered availability
     bitmaps — never payloads (``gossip._shard_bank_tick``). Per-receiver
     arithmetic only, so both are bitwise-identical.
+
+    ``return_pending=True`` additionally returns the (Rb, R) bool mask of
+    links that still had assigned work after the budget ran out — the
+    continuous-time event engine (``repro.net.events``) schedules a
+    chunk-drain completion event from it; the default keeps the tick paths
+    byte-for-byte what they were.
     """
     rb, s, c = sat_blk.shape
     ref = referenced_slots(dags, s)
@@ -211,11 +218,14 @@ def chunk_step(
     # links that did not fire; never bank idle bandwidth on an active link
     credit = jnp.where(pending, budget - spent,
                        jnp.where(edges, 0.0, bstate.credit))
-    return BankState(
+    out = BankState(
         have=bstate.have | take.reshape(rb, s, c),
         credit=credit,
         sent=bstate.sent + spent,
     )
+    if return_pending:
+        return out, pending
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,18 @@ referenced chunks to arrive, with its tick bound extended by the slowest
 link's slot-drain time. ``bank_cfg=None`` (default) is exactly the PR-3
 driver.
 
+Continuous time: constructed with ``GossipConfig(engine="events")``,
+``advance`` runs the ``repro.net.events`` engine instead of the tick scan —
+per-edge deliveries fire at the link's ACTUAL latency (a 0.3 s link no
+longer waits for the 1 s tick; a 3.7 s link is no longer rounded to 4),
+and with the bank gossiped, chunk drains complete at whole-chunk instants
+with continuously-accrued budget. ``engine="ticks"`` (the default) keeps
+every path here bitwise what it was, and the degenerate uniform-delay
+limit of the event engine is bitwise the tick path (CI-enforced; requires
+a float32-exact period — see ``repro.net.events`` on the f32 event clock).
+``converge()`` is the engine-independent anti-entropy fixpoint flush (the
+tick while-loop — a flush has no timeline to quantize).
+
 ``GossipNetwork`` is the host-side driver the simulator talks to: it owns
 the replica set, the tick clock, and the schedule bookkeeping; all jitted
 entry points live at module level (cached per ``impl`` x ``mesh``
@@ -116,12 +128,26 @@ class GossipConfig:
     ``impl`` picks the round implementation: "fused" (kernel reduction;
     Pallas on TPU, pure-lax elsewhere), "scan" (PR-1 reference fold), or the
     explicit backends "pallas" / "lax".
+
+    ``engine`` picks the transport clock: "ticks" (the quantized stride
+    model — every path bitwise what it was) or "events" (the continuous-time
+    engine, ``repro.net.events``: per-edge deliveries at the link's actual
+    latency, bank chunk-drains at whole-chunk completion instants, one
+    jitted while_loop per advance). Under "events",
+    ``max_ticks_per_advance`` caps how often each delivery edge fires per
+    advance window — a backlog beyond the cap is ELIDED (the edge's
+    schedule jumps past the window), bitwise the tick engine's
+    fast-forward, so the degenerate-limit equivalence holds for any window
+    size; ``max_events_per_advance`` bounds one dispatch's event batches,
+    and a window truncated by it resumes on the next ``advance`` call.
     """
 
     sync_period: float = 1.0
     seed: int = 0
     max_ticks_per_advance: int = 64
     impl: str = "fused"
+    engine: str = "ticks"
+    max_events_per_advance: int = 8192
 
 
 # ---------------------------------------------------------------------------
@@ -683,10 +709,33 @@ class GossipNetwork:
                 )
             )
         self.tick = 0                # global tick index (drives strides)
-        self.rounds_run = 0          # ticks actually executed
+        self.rounds_run = 0          # ticks / event batches actually executed
         self.device_calls = 0        # jitted sync dispatches issued
+        self.events_processed = 0    # event batches fired (engine="events")
         period = cfg.sync_period
         self._next_tick_t = period if period > 0 else 0.0
+        if cfg.engine not in ("ticks", "events"):
+            raise ValueError(f"unknown gossip engine: {cfg.engine!r}")
+        if cfg.engine == "events":
+            if mesh is not None:
+                raise NotImplementedError(
+                    "engine='events' is single-device for now — the event "
+                    "queue is not mesh-sharded (see ROADMAP open items)"
+                )
+            from repro.net import events as events_lib
+            self._equeue, self._eislot = events_lib.make_edge_queue(
+                top, period if period > 0 else 1.0,
+                drain_slots=bank_cfg is not None,
+            )
+            if partition is not None:
+                self._part_t0 = jnp.float32(partition.t_start)
+                self._part_t1 = jnp.float32(partition.t_end)
+            else:
+                self._part_t0 = jnp.float32(float("inf"))
+                self._part_t1 = jnp.float32(float("-inf"))
+            if bank_cfg is not None:
+                self._last_srv = jnp.zeros((n, n), jnp.float32)
+                self._bw_bytes = jnp.asarray(top.bandwidth / 8.0, jnp.float32)
 
     # --- replica access ----------------------------------------------------
 
@@ -811,11 +860,56 @@ class GossipNetwork:
         pact = self.partition is not None and self.partition.active(t)
         self._run_ticks([self.tick], [pact])
 
+    def _advance_events(self, t: float) -> None:
+        """Run every continuous-time event at or before ``t`` as ONE jitted
+        while-loop dispatch (``repro.net.events``). Delivery slots recycle
+        in place, so the queue state simply persists across calls."""
+        from repro.net import events as events_lib
+
+        limit = jnp.int32(self.cfg.max_events_per_advance)
+        fire_cap = jnp.int32(self.cfg.max_ticks_per_advance)
+        if self.bank_cfg is not None:
+            dags, bstate, self._last_srv, self._key, qt, qv, done = (
+                events_lib._advance_events_bank_jit(
+                    self.cfg.impl, self.bank_cfg.impl
+                )(
+                    self.replicas.dags, self.replicas.bank_state.have,
+                    self.replicas.bank_state.credit,
+                    self.replicas.bank_state.sent, self._last_srv,
+                    self._digest, self._equeue.time, self._equeue.valid,
+                    self._equeue.kind, self._equeue.src, self._equeue.dst,
+                    self._equeue.seq, self._eislot, self._key,
+                    jnp.float32(t), limit, fire_cap, self._part_mask,
+                    self._part_t0, self._part_t1, self._drop, self._nbr_idx,
+                    self._nbr_valid, self._bw_bytes, self._chunk_bytes,
+                )
+            )
+            self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
+        else:
+            dags, qt, qv, self._key, done = events_lib._advance_events_jit(
+                self.cfg.impl
+            )(
+                self.replicas.dags, self._equeue.time, self._equeue.valid,
+                self._equeue.kind, self._equeue.src, self._equeue.dst,
+                self._equeue.seq, self._eislot, self._key, jnp.float32(t),
+                limit, fire_cap, self._part_mask, self._part_t0,
+                self._part_t1, self._drop, self._nbr_idx, self._nbr_valid,
+            )
+            self.replicas = self.replicas._replace(dags=dags)
+        self._equeue = self._equeue._replace(time=qt, valid=qv)
+        self.tick += int(done)
+        self.rounds_run += int(done)
+        self.events_processed += int(done)
+        self.device_calls += 1
+
     def advance(self, t: float) -> None:
         """Run every sync tick scheduled at or before simulation time ``t``
         as one batched dispatch."""
         if self.cfg.sync_period <= 0:
             self.converge(at_time=t)
+            return
+        if self.cfg.engine == "events":
+            self._advance_events(t)
             return
         ticks, pacts = [], []
         nt = self._next_tick_t

@@ -1,0 +1,103 @@
+"""Algorithm 1 — the external agent E (`repro.core.controller`).
+
+Direct units for the controller loop the systems drivers wrap: the genesis
+transaction's shape, the no-valid-tips early return, and the
+``ACC_t >= ACC_0`` end-signal condition.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DagFLConfig
+from repro.core import bank as bank_lib
+from repro.core import dag as dag_lib
+from repro.core.controller import Controller
+
+
+def _cfg(**kw):
+    base = dict(num_nodes=6, alpha=3, k=2, capacity=16, target_accuracy=0.9)
+    base.update(kw)
+    return DagFLConfig(**base)
+
+
+def _params():
+    return {"w": jnp.arange(8.0), "b": jnp.ones((3,))}
+
+
+def _eval_returning(values):
+    """eval_fn stub: pops scripted accuracies, then repeats the last one."""
+    seq = list(values)
+
+    def eval_fn(params, batch):
+        v = seq.pop(0) if len(seq) > 1 else seq[0]
+        return jnp.asarray(v, jnp.float32)
+
+    return eval_fn
+
+
+def test_genesis_transaction_shape():
+    """Genesis: row 0 is E's transaction — published by node id N at t=0,
+    no approvals, model at bank slot 0 holding the initial params."""
+    cfg = _cfg()
+    ctrl = Controller(cfg, _eval_returning([0.25]))
+    params = _params()
+    state = ctrl.genesis(params, val_batch=None)
+    dag = state.dag
+    assert dag.publisher.shape == (cfg.capacity,)
+    assert dag.approvals.shape == (cfg.capacity, cfg.k)
+    assert int(dag.count) == 1
+    assert int(dag.publisher[0]) == cfg.num_nodes          # E's node id
+    assert float(dag.publish_time[0]) == 0.0
+    assert np.all(np.asarray(dag.approvals[0]) == dag_lib.NO_TX)
+    assert int(dag.approval_count[0]) == 0                 # genesis is a tip
+    assert int(dag.model_slot[0]) == 0
+    assert float(dag.accuracy[0]) == 0.25
+    # the bank's slot 0 holds the genesis payload bitwise
+    stored = bank_lib.bank_read(state.bank, jnp.asarray(0))
+    for a, b in zip(jax.tree_util.tree_leaves(stored),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not state.done and state.checks == 0
+
+
+def test_check_no_valid_tips_early_return():
+    """Every tip staler than tau_max: check() must count the visit but
+    leave the target model, best accuracy, and done flag untouched."""
+    cfg = _cfg(tau_max=5.0)
+    ctrl = Controller(cfg, _eval_returning([0.25]))
+    state = ctrl.genesis(_params(), val_batch=None)
+    # genesis published at t=0; now is far past the staleness threshold
+    out = ctrl.check(state, jax.random.PRNGKey(0), now=100.0, val_batch=None)
+    assert out.checks == 1
+    assert out.target_model is None
+    assert out.best_accuracy == 0.0
+    assert not out.done
+
+
+def test_check_tracks_best_and_stops_at_target():
+    """ACC_t rises across checks: best/target update monotonically and the
+    end signal fires exactly when ACC_t >= ACC_0."""
+    cfg = _cfg(target_accuracy=0.9, tau_max=50.0)
+    # scripted evals: genesis 0.2; check 1 validates tips (0.4) then scores
+    # the candidate 0.5; check 2: 0.6 then 0.95 (>= ACC_0)
+    ctrl = Controller(cfg, _eval_returning([0.2, 0.4, 0.5, 0.6, 0.95]))
+    state = ctrl.genesis(_params(), val_batch=None)
+    state = ctrl.check(state, jax.random.PRNGKey(1), now=1.0, val_batch=None)
+    assert state.checks == 1
+    assert state.best_accuracy == 0.5
+    assert state.target_model is not None and not state.done
+    state = ctrl.check(state, jax.random.PRNGKey(2), now=2.0, val_batch=None)
+    assert state.checks == 2
+    assert state.best_accuracy == np.float32(0.95)
+    assert state.done                                      # end signal to D
+
+
+def test_check_never_regresses_best():
+    cfg = _cfg(target_accuracy=0.99, tau_max=50.0)
+    ctrl = Controller(cfg, _eval_returning([0.2, 0.4, 0.7, 0.6, 0.3]))
+    state = ctrl.genesis(_params(), val_batch=None)
+    state = ctrl.check(state, jax.random.PRNGKey(1), now=1.0, val_batch=None)
+    best = state.best_accuracy
+    state = ctrl.check(state, jax.random.PRNGKey(2), now=2.0, val_batch=None)
+    assert state.best_accuracy == best                     # 0.3 never wins
+    assert not state.done

@@ -80,7 +80,7 @@ def test_chunk_dedup_same_content_across_slots():
     )
 
 
-def test_transfer_select_budget_and_sender_order():
+def test_transfer_select_budget_and_striping():
     need = jnp.asarray([[True, True, True]])
     src = jnp.asarray([[False, False, False],
                        [True, True, False],
@@ -88,11 +88,48 @@ def test_transfer_select_budget_and_sender_order():
     edges = jnp.asarray([[False, True, True]])
     afford = jnp.asarray([[0, 1, 1]], jnp.int32)
     take, spent, pending = ck.transfer_select(need, src, edges, afford)
-    # chunk 0 -> sender 1 (lowest active index), chunk 1 assigned to sender 1
-    # but over budget (pending), chunk 2 -> sender 2
-    np.testing.assert_array_equal(np.asarray(take), [[True, False, True]])
+    # striping: chunk 0 (2 holders, 0 mod 2) -> sender 1; chunk 1 (1 mod 2)
+    # -> sender 2; chunk 2 (sole holder) -> sender 2, over budget -> pending
+    np.testing.assert_array_equal(np.asarray(take), [[True, True, False]])
     np.testing.assert_array_equal(np.asarray(spent), [[0, 1, 1]])
-    np.testing.assert_array_equal(np.asarray(pending), [[False, True, False]])
+    np.testing.assert_array_equal(np.asarray(pending), [[False, False, True]])
+
+
+def test_transfer_select_single_holder_is_lowest_index_rule():
+    """One holder per chunk: striping degenerates to the PR-4 assignment."""
+    need = jnp.asarray([[True, True]])
+    src = jnp.asarray([[True, True], [False, False]])
+    edges = jnp.asarray([[True, True]])
+    afford = jnp.asarray([[2, 2]], jnp.int32)
+    take, spent, pending = ck.transfer_select(need, src, edges, afford)
+    np.testing.assert_array_equal(np.asarray(take), [[True, True]])
+    np.testing.assert_array_equal(np.asarray(spent), [[2, 0]])
+    np.testing.assert_array_equal(np.asarray(pending), [[False, False]])
+
+
+def test_striping_uses_parallel_links_to_distinct_holders():
+    """Satellite acceptance: two holders of the same content drain a slot
+    in HALF the ticks — distinct chunks ride distinct links — where the
+    PR-4 lowest-indexed assignment left the second link idle."""
+    cfg = BankGossipConfig(chunks_per_slot=4)
+    payload = jnp.arange(8.0)
+    # slot 32 B over 4 chunks; 8 B/tick/link = one chunk per link per tick
+    striped = make_net(topo.full(3, bandwidth=64.0), bank_cfg=cfg)
+    publish_on(striped, 0, 1, 0.1, params=payload)
+    publish_on(striped, 1, 2, 0.2, params=payload)   # identical content:
+    # dedup makes BOTH 0 and 1 effective holders of every needed chunk
+    control = make_net(topo.full(3, bandwidth=64.0), bank_cfg=cfg)
+    publish_on(control, 0, 1, 0.1, params=payload)
+    publish_on(control, 1, 2, 0.2, params=jnp.arange(8.0) + 100.0)  # distinct
+    striped.advance(2.0)
+    control.advance(2.0)
+    # two holders, 4 distinct digests, 2 links x 1 chunk/tick -> 2 ticks
+    assert int(striped.missing_chunks()[2]) == 0
+    # single holder per slot: each slot needs 4 ticks on its own link
+    assert int(control.missing_chunks()[2]) > 0
+    # both of node 2's inbound links were actually paid for the same slot
+    sent = np.asarray(striped.bank_state.sent)
+    assert sent[2, 0] > 0 and sent[2, 1] > 0
 
 
 def test_nan_payload_still_transfers_at_physical_identity():

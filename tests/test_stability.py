@@ -45,6 +45,18 @@ def test_larger_k_reduces_tip_count():
     assert l4 / stability.iteration_delay(c4, None or 1.5e9) < l2 / stability.iteration_delay(c2, 1.5e9)
 
 
+def test_tail_mean_guards_short_traces():
+    """Regression: len * frac < 1 produced tips[-0:] — the WHOLE trace —
+    silently; now the estimate degrades to the last sample, and an empty
+    trace is NaN instead of a numpy mean-of-empty warning."""
+    tr = stability.TipTrace(np.asarray([0.0, 1.0]), np.asarray([10.0, 4.0]))
+    assert tr.tail_mean(0.4) == 4.0              # n clamps to 1: last sample
+    assert tr.tail_mean(0.5) == 4.0
+    assert tr.tail_mean(1.0) == 7.0
+    empty = stability.TipTrace(np.asarray([]), np.asarray([]))
+    assert np.isnan(empty.tail_mean())
+
+
 @pytest.mark.parametrize("k", [2, 3])
 def test_simulation_matches_eq4(k):
     c = cfg(k=k, alpha=5)
