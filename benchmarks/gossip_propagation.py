@@ -20,9 +20,12 @@ Accuracy sweeps (claims validated at bench scale):
 ``python -m benchmarks.gossip_propagation --smoke`` runs a reduced grid and
 FAILS (exit 1) if the fused round loses bitwise equivalence with the scan
 round, drops below a 2x speedup, the mesh round diverges from the fused
-one, bank gossip at unlimited capacity diverges from the bankless path, or
+one, bank gossip at unlimited capacity diverges from the bankless path,
 the event engine's degenerate uniform-delay limit diverges from the tick
-path — the CI tripwires.
+path, an obs-instrumented run diverges from the obs-off path, or the
+warmed obs collectors cost more than 10% wall time — the CI tripwires.
+It also exports the last obs-on run as ``obs_sample.trace.json`` (the
+Perfetto-loadable artifact CI uploads).
 """
 import argparse
 import json
@@ -42,6 +45,9 @@ from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
 from repro.net.bank import BankGossipConfig
+from repro.obs import ObsConfig, write_chrome_trace
+
+TRACE_SAMPLE_PATH = "obs_sample.trace.json"
 
 JSON_PATH = "BENCH_gossip_sync.json"
 
@@ -235,7 +241,7 @@ def _results_bitwise_equal(a, b) -> bool:
     )
 
 
-def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg):
+def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg, obs=None):
     dcfg = default_dagfl_config(num_nodes=n)
     sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
                     seed=seed)
@@ -244,7 +250,7 @@ def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg):
         task, nodes, dcfg, sim, gval,
         topology=topo.ring(n, seed=seed, bandwidth=bandwidth),
         gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed, impl=impl),
-        bank_gossip=bank_cfg,
+        bank_gossip=bank_cfg, obs=obs,
     )
 
 
@@ -264,44 +270,53 @@ def run_bank_gossip(
       the max chunk backlog (``bank_lag``) grows as links shrink from the
       Table-I 100 Mbps budget to an IoT-class 1 Mbps uplink, while the
       byte meter records what the run actually paid.
+
+    Every row is read off the exported telemetry (``extras["obs"]`` — the
+    per-round ``chunk_lag`` series and the ``final`` snapshot), not off
+    ``GossipNetwork`` private state; the banked equivalence run executes
+    WITH collectors on, so the tripwire simultaneously re-proves that obs
+    never perturbs the trajectory.
     """
     rows = []
     for impl in impls:
         base = _run_banked(n, iterations, seed, impl, float("inf"), None)
         banked = _run_banked(
             n, iterations, seed, impl, float("inf"),
-            BankGossipConfig(chunks_per_slot=4),
+            BankGossipConfig(chunks_per_slot=4), obs=ObsConfig(),
         )
         equivalent = _results_bitwise_equal(base, banked)
+        rep = banked.extras["obs"]
         emit(
             f"gossip/bank_gossip/equivalence/{impl}", float(equivalent),
             f"bitwise_equal_unbanked={equivalent};"
-            f"bytes={banked.extras['bank_bytes_sent']:.0f}",
+            f"bytes={rep.final['bytes_sent']:.0f}",
         )
         rows.append(dict(
             kind="equivalence", impl=impl, n=n, iterations=iterations,
             bitwise_equal_unbanked=bool(equivalent),
-            bytes_sent=float(banked.extras["bank_bytes_sent"]),
+            bytes_sent=float(rep.final["bytes_sent"]),
         ))
     for cls, bits in topo.TABLE1_LINK_CLASSES.items():
         res = _run_banked(
             n, iterations, seed, "fused", bits,
             BankGossipConfig(chunks_per_slot=4, slot_bytes=7e6),   # Table-I phi
+            obs=ObsConfig(),
         )
-        lag_curve = res.extras["bank_lag_curve"]
-        peak_lag = int(lag_curve[:, 2].max()) if len(lag_curve) else 0
-        final_missing = int(res.extras["bank_missing_final"].max())
+        rep = res.extras["obs"]
+        lag_series = rep.series["chunk_lag"]
+        peak_lag = int(lag_series.max()) if len(lag_series) else 0
+        final_missing = int(rep.final["chunk_lag"])
         emit(
             f"gossip/bank_gossip/sweep/{cls}", peak_lag,
             f"final_acc={res.accs[-1]:.3f};final_missing={final_missing};"
-            f"bytes={res.extras['bank_bytes_sent']:.3g}",
+            f"bytes={rep.final['bytes_sent']:.3g}",
         )
         rows.append(dict(
             kind="sweep", link_class=cls,
             bandwidth_bps=bits if np.isfinite(bits) else None, n=n,
             iterations=iterations, peak_chunk_lag=peak_lag,
             final_missing_chunks=final_missing,
-            bytes_sent=float(res.extras["bank_bytes_sent"]),
+            bytes_sent=float(rep.final["bytes_sent"]),
             final_acc=float(res.accs[-1]),
         ))
     if record is not None:
@@ -437,6 +452,87 @@ def run_event_engine(
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Observability: zero-perturbation equivalence + collector overhead
+# ---------------------------------------------------------------------------
+
+
+def _run_observed(n, iterations, seed, engine, obs):
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
+                    seed=seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=seed)
+    with timed() as t:
+        res = run_dagfl_gossip(
+            task, nodes, dcfg, sim, gval,
+            topology=topo.ring(n, link_latency=1.0, seed=seed),
+            gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed),
+            engine=engine, obs=obs,
+        )
+    return res, t["s"]
+
+
+def run_observability(
+    n: int = 8, iterations: int = 12, seed: int = 0,
+    engines=("ticks", "events"), trace_path: str = TRACE_SAMPLE_PATH,
+    record: dict = None,
+):
+    """In-loop telemetry (``repro.obs``) measurements.
+
+    Two claims per engine, machine-checked into ``BENCH_gossip_sync.json``:
+
+    * EQUIVALENCE (the CI tripwire): an obs-instrumented run — metric
+      accumulators and the trace ring threaded through every jitted loop —
+      is bitwise the obs-off run end to end (accuracy curve, timing, union
+      ledger): collection is a pure read;
+    * OVERHEAD: the warmed wall-time cost of collecting. Each arm runs
+      twice (first run pays compilation, second is timed; best-of rule:
+      the min) and the obs-on/obs-off ratio must stay under 1.10 — the
+      <10% acceptance bound.
+
+    Side effect: the last obs-on report is exported to ``trace_path`` as a
+    Chrome/Perfetto trace — the artifact CI uploads.
+    """
+    rows = []
+    report = None
+    for engine in engines:
+        walls = {}
+        results = {}
+        for tag, obs in (("off", None), ("on", ObsConfig())):
+            best = float("inf")
+            for _ in range(2):                     # warmup, then timed
+                res, wall = _run_observed(n, iterations, seed, engine, obs)
+                best = min(best, wall)
+            walls[tag], results[tag] = best, res
+        equivalent = _results_bitwise_equal(results["off"], results["on"])
+        overhead = walls["on"] / max(walls["off"], 1e-12)
+        report = results["on"].extras["obs"]
+        emit(
+            f"gossip/observability/{engine}", overhead,
+            f"bitwise_equal_obs_off={equivalent};"
+            f"overhead_ratio={overhead:.3f};rounds={report.rounds};"
+            f"samples={len(report.series['t'])};"
+            f"trace_events={len(report.trace['t'])};"
+            f"trace_dropped={report.trace_dropped}",
+        )
+        rows.append(dict(
+            kind="equivalence", engine=engine, n=n, iterations=iterations,
+            bitwise_equal_obs_off=bool(equivalent),
+            overhead_ratio=float(overhead),
+            wall_s_obs_off=float(walls["off"]), wall_s_obs_on=float(walls["on"]),
+            rounds=int(report.rounds), samples=int(len(report.series["t"])),
+            trace_events=int(len(report.trace["t"])),
+            trace_dropped=int(report.trace_dropped),
+            dispatch_counts=dict(report.dispatch_counts),
+        ))
+    if report is not None and trace_path:
+        write_chrome_trace(report, trace_path)
+        print(f"# wrote {trace_path}")
+    if record is not None:
+        record["observability"] = rows
+    return rows
+
+
 def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
     record = dict(record, schema="gossip_sync_bench_v1", backend=jax.default_backend())
     with open(path, "w") as f:
@@ -447,8 +543,9 @@ def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
 def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     """Everything BENCH_gossip_sync.json carries: the fast-path grid, the
     sharded round, dispatch batching, the bank-gossip equivalence +
-    bandwidth sweep, and the event-engine equivalence + continuous-time
-    rows (no accuracy sweeps)."""
+    bandwidth sweep, the event-engine equivalence + continuous-time rows,
+    and the observability equivalence + overhead rows (no accuracy
+    sweeps)."""
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
@@ -456,6 +553,7 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     run_dispatch_batching(record=record)
     run_bank_gossip(record=record)
     run_event_engine(record=record)
+    run_observability(record=record)
     if own:
         write_bench_json(record, json_path)
     return record
@@ -528,6 +626,7 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
                           record=record)
     run_bank_gossip(seed=seed, record=record)
     run_event_engine(seed=seed, record=record)
+    run_observability(seed=seed, record=record)
     write_bench_json(record, json_path)
     run_sweep(iterations=iterations, num_nodes=num_nodes, seed=seed)
     run_partition(iterations=iterations, num_nodes=num_nodes, seed=seed)
@@ -538,8 +637,10 @@ def smoke(json_path: str = JSON_PATH) -> int:
     < 2x speedup, a mesh-sharded round that diverges from the single-device
     fused round (when >1 device is visible — the 8-device CI lane), a
     bank-gossip run at unlimited capacity that is no longer bitwise the
-    bankless PR-3 path, or an event-engine run in the degenerate
-    uniform-delay limit that is no longer bitwise the tick path.
+    bankless PR-3 path, an event-engine run in the degenerate
+    uniform-delay limit that is no longer bitwise the tick path, an
+    obs-instrumented run that is no longer bitwise the obs-off path, or a
+    warmed obs-on run costing more than 10% extra wall time.
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -554,6 +655,7 @@ def smoke(json_path: str = JSON_PATH) -> int:
         n=6, iterations=8, impls=("fused",), insystem_horizon=0.0,
         record=record,
     )
+    obs_rows = run_observability(n=6, iterations=10, record=record)
     write_bench_json(record, json_path)
     ok = True
     for row in rows:
@@ -585,6 +687,17 @@ def smoke(json_path: str = JSON_PATH) -> int:
             ok = False
     if not any(r["kind"] == "equivalence" for r in event_rows):
         print("# SMOKE FAIL: no event-engine equivalence rows recorded")
+        ok = False
+    for row in obs_rows:
+        if not row["bitwise_equal_obs_off"]:
+            print(f"# SMOKE FAIL: obs-instrumented run diverged from the "
+                  f"obs-off path: {row}")
+            ok = False
+        if row["overhead_ratio"] > 1.10:
+            print(f"# SMOKE FAIL: obs collector overhead above 10%: {row}")
+            ok = False
+    if not obs_rows:
+        print("# SMOKE FAIL: no observability rows recorded")
         ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1

@@ -9,6 +9,7 @@ CNN/LSTM on synthetic data) — trends and orderings are the reproduction
 target; see EXPERIMENTS.md.
 """
 import argparse
+import subprocess
 import sys
 import time
 import traceback
@@ -69,6 +70,14 @@ def main() -> None:
         # gossip_sync — the standalone entry exists only for targeted
         # --only runs, so a default full run doesn't execute it twice.
         *([("event_engine", lambda: gossip_propagation.run_event_engine())]
+          if args.only else []),
+        # in-loop telemetry: obs-off bitwise equivalence + collector
+        # overhead. Already part of gossip_sync; same targeted-run rule.
+        *([("observability", lambda: gossip_propagation.run_observability())]
+          if args.only else []),
+        # demo: write a Perfetto trace + metrics JSONL from a small sim
+        *([("obs_report", lambda: subprocess.check_call(
+            [sys.executable, "scripts/obs_report.py", "--iterations", "10"]))]
           if args.only else []),
         ("gossip", lambda: (
             gossip_propagation.run_sweep(iters_mid),

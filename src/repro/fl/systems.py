@@ -37,6 +37,8 @@ from repro.net import gossip as gossip_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo_lib
 from repro.net.bank import BankGossipConfig
+from repro.obs import ObsConfig
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -254,6 +256,11 @@ def _run_dagfl_events(task, nodes, dcfg, sim, global_val, weighted, make_backend
         node = nodes[rng.integers(0, N)]
         lazy = node.behavior == "lazy"
         t1 = t0 + lat.dagfl_iteration(node.node_id, lazy=lazy)
+        # telemetry hook: backends with an event trace record the iteration
+        # span (PUBLISH at t0, duration t1 - t0) — a host-side note, free
+        on_start = getattr(backend, "on_start", None)
+        if on_start is not None:
+            on_start(node.node_id, t0, t1)
         fn = prep_lazy if lazy else prep_normal
         bias = bd_bias if node.behavior == "backdoor" else zero_bias
         prepared = fn(
@@ -328,10 +335,10 @@ class _GossipLedger:
     name = "dagfl_gossip"
 
     def __init__(self, state, topology, gossip, partition, mesh=None,
-                 bank_gossip=None):
+                 bank_gossip=None, obs=None):
         self.net = gossip_lib.GossipNetwork(
             state.dag, state.bank, topology, gossip, partition, mesh=mesh,
-            bank_cfg=bank_gossip,
+            bank_cfg=bank_gossip, obs_cfg=obs,
         )
         self.capacity = int(state.dag.publisher.shape[0])
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
@@ -353,6 +360,11 @@ class _GossipLedger:
     def advance(self, t):
         self.net.advance(t)
 
+    def on_start(self, node_id, t0, t1):
+        # iteration span for the event trace (no-op without telemetry)
+        self.net.trace_host(t0, obs_trace.KIND_PUBLISH, node_id, node_id,
+                            t1 - t0)
+
     def commit(self, node_id, t1, prepared):
         dag_i = self.net.read(node_id)
         dag_i, bank = self._commit(
@@ -364,6 +376,8 @@ class _GossipLedger:
         # chunks; the ring-reused slot's old content leaves everyone else
         self.net.bank_commit(node_id, self.seq % self.capacity,
                              prepared.new_params)
+        self.net.trace_host(t1, obs_trace.KIND_COMMIT, node_id, node_id,
+                            float(self.seq))
         self.seq += 1
         self.approvals_issued += int(np.sum(np.asarray(prepared.chosen_rows) >= 0))
 
@@ -388,10 +402,14 @@ class _GossipLedger:
                 "bank_bytes_sent": self.net.bytes_sent(),
                 "bank_lag_curve": np.asarray(self.bank_lag, dtype=np.float64),
             }
+        if self.net.obs_cfg is not None:
+            # drained telemetry: metric series, trace, dispatch breakdown
+            out["obs"] = self.net.obs_report()
         return out | {
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
             "device_calls": self.net.device_calls,
+            "dispatch_counts": dict(self.net.dispatch_counts),
             "events_processed": self.net.events_processed,
             "synced_final": self.net.synced(),
             "missing_rows_final": self.net.missing_rows(union),
@@ -419,6 +437,7 @@ def run_dagfl_gossip(
     mesh=None,
     bank_gossip: Optional[BankGossipConfig] = None,
     engine: Optional[str] = None,
+    obs: Optional[ObsConfig] = None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -452,6 +471,13 @@ def run_dagfl_gossip(
     drain at whole-chunk completion instants. With a uniform per-edge
     delay equal to the sync period the two engines are bitwise identical
     (CI-enforced); heterogeneous latencies make the difference measurable.
+
+    ``obs`` (``repro.obs.ObsConfig``) turns on device-resident telemetry:
+    metric accumulators and an event trace ring ride the jitted sync loops
+    as pure reads, drained into ``extras["obs"]`` (an ``ObsReport`` —
+    Chrome-trace / JSONL export via ``repro.obs.export``). Collection
+    never perturbs the trajectory: the obs-on run is bitwise the obs-off
+    run (CI-enforced).
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
@@ -463,7 +489,7 @@ def run_dagfl_gossip(
         task, nodes, dcfg, sim, global_val, weighted,
         lambda state, commit_fn: _GossipLedger(
             state, topology, gossip, partition, mesh=mesh,
-            bank_gossip=bank_gossip,
+            bank_gossip=bank_gossip, obs=obs,
         ),
     )
 

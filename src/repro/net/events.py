@@ -236,7 +236,7 @@ def _deliver_round(dags, qt, fires, key, t, qv, qkind, qsrc, qdst, islot,
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_jit(impl: str):
+def _advance_events_jit(impl: str, obs=None):
     """Event-driven ``advance``: one ``lax.while_loop`` over delivery batches.
 
     Each iteration pops the queue head (``repro.kernels.event_pop``),
@@ -246,38 +246,79 @@ def _advance_events_jit(impl: str):
     overflowing backlog exactly as the tick driver fast-forwards — so the
     degenerate uniform-delay limit is bitwise the tick path, key included,
     for any advance window.
+
+    ``obs`` (an ``repro.obs.ObsConfig``) threads the telemetry collectors
+    through the loop carry, sampled once per event batch at the batch
+    instant — a pure read, so the dags/key trajectory is bitwise the
+    ``obs=None`` program, whose body below is the untouched code.
     """
+
+    if obs is None:
+        def advance(dags, qtime, qvalid, qkind, qsrc, qdst, qseq, islot, key,
+                    horizon, limit, fire_cap, part_mask, part_t0, part_t1,
+                    drop, nbr_idx, nbr_valid):
+
+            def cond(carry):
+                _dags, qt, qv, _fires, _key, done = carry
+                return _queue_head_due(qt, qv, horizon) & (done < limit)
+
+            def body(carry):
+                dags, qt, qv, fires, key, done = carry
+                idx, _found = event_pop(qt, qkind, qseq, qv)
+                t = qt[idx]
+                dags, qt, fires, key, _dlv, _live, _pm = _deliver_round(
+                    dags, qt, fires, key, t, qv, qkind, qsrc, qdst, islot,
+                    horizon, fire_cap, part_mask, part_t0, part_t1, drop,
+                    nbr_idx, nbr_valid, impl,
+                )
+                return dags, qt, qv, fires, key, done + 1
+
+            dags, qt, qv, _fires, key, done = jax.lax.while_loop(
+                cond, body,
+                (dags, qtime, qvalid, jnp.zeros_like(qseq), key, jnp.int32(0)),
+            )
+            return dags, qt, qv, key, done
+
+        return jax.jit(advance)
+
+    from repro import obs as obs_lib   # deferred: repro.obs imports repro.net
 
     def advance(dags, qtime, qvalid, qkind, qsrc, qdst, qseq, islot, key,
                 horizon, limit, fire_cap, part_mask, part_t0, part_t1, drop,
-                nbr_idx, nbr_valid):
+                nbr_idx, nbr_valid, metrics, ring):
 
         def cond(carry):
-            _dags, qt, qv, _fires, _key, done = carry
+            _dags, qt, qv = carry[0], carry[1], carry[2]
+            done = carry[7]
             return _queue_head_due(qt, qv, horizon) & (done < limit)
 
         def body(carry):
-            dags, qt, qv, fires, key, done = carry
+            dags, qt, qv, fires, key, metrics, ring, done = carry
             idx, _found = event_pop(qt, qkind, qseq, qv)
             t = qt[idx]
-            dags, qt, fires, key, _dlv, _live, _pm = _deliver_round(
+            old = dags
+            dags, qt, fires, key, _dlv, live, _pm = _deliver_round(
                 dags, qt, fires, key, t, qv, qkind, qsrc, qdst, islot,
                 horizon, fire_cap, part_mask, part_t0, part_t1, drop,
                 nbr_idx, nbr_valid, impl,
             )
-            return dags, qt, qv, fires, key, done + 1
+            metrics, ring = obs_lib.observe_round(
+                obs, metrics, ring, t, old, dags, live_edges=live
+            )
+            return dags, qt, qv, fires, key, metrics, ring, done + 1
 
-        dags, qt, qv, _fires, key, done = jax.lax.while_loop(
+        dags, qt, qv, _fires, key, metrics, ring, done = jax.lax.while_loop(
             cond, body,
-            (dags, qtime, qvalid, jnp.zeros_like(qseq), key, jnp.int32(0)),
+            (dags, qtime, qvalid, jnp.zeros_like(qseq), key, metrics, ring,
+             jnp.int32(0)),
         )
-        return dags, qt, qv, key, done
+        return dags, qt, qv, key, done, metrics, ring
 
     return jax.jit(advance)
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_bank_jit(impl: str, bank_impl):
+def _advance_events_bank_jit(impl: str, bank_impl, obs=None):
     """Event-driven ``advance`` with the model bank gossiped.
 
     The row half of a batch is the shared ``_deliver_round`` (fire caps and
@@ -289,13 +330,19 @@ def _advance_events_bank_jit(impl: str, bank_impl):
     limit stays bitwise the tick path). A serviced link with work left over
     arms its drain slot at the instant its next whole chunk completes; a
     link partitioned away retries one chunk-time later without resetting
-    the rolled-over credit.
+    the rolled-over credit. ``obs`` threads the telemetry carry exactly as
+    in ``_advance_events_jit`` (``obs=None`` keeps the untouched program);
+    bank batches additionally sample chunk lag / byte totals and record a
+    DRAIN trace span per link that moved payload.
     """
+
+    if obs is not None:
+        from repro import obs as obs_lib
 
     def advance(dags, have, credit, sent, last_srv, digest, qtime, qvalid,
                 qkind, qsrc, qdst, qseq, islot, key, horizon, limit,
                 fire_cap, part_mask, part_t0, part_t1, drop, nbr_idx,
-                nbr_valid, bw_bytes, chunk_bytes):
+                nbr_valid, bw_bytes, chunk_bytes, *obs_carry):
         n = dags.publisher.shape[0]
 
         def cond(carry):
@@ -303,7 +350,12 @@ def _advance_events_bank_jit(impl: str, bank_impl):
             return _queue_head_due(qt, qv, horizon) & (done < limit)
 
         def body(carry):
-            dags, bstate, last_srv, key, qt, qv, fires, done = carry
+            if obs is not None:
+                (dags, bstate, last_srv, key, qt, qv, fires, done,
+                 metrics, ring) = carry
+                old_dags, old_sent = dags, bstate.sent
+            else:
+                dags, bstate, last_srv, key, qt, qv, fires, done = carry
             idx, _found = event_pop(qt, qkind, qseq, qv)
             t = qt[idx]
             batch = qv & (qt == t)
@@ -357,15 +409,22 @@ def _advance_events_bank_jit(impl: str, bank_impl):
             qt = jnp.where(is_drn & e_svc,
                            jnp.where(e_pend, e_next, jnp.inf), qt)
             qt = jnp.where(batch & is_drn & ~e_svc, e_retry, qt)
+            if obs is not None:
+                metrics2, ring2 = obs_lib.observe_round(
+                    obs, metrics, ring, t, old_dags, dags, live_edges=live,
+                    bytes_delta=bstate.sent - old_sent, bstate=bstate,
+                    digest=digest, bank_impl=bank_impl,
+                )
+                return (dags, bstate, last_srv, key, qt, qv, fires, done + 1,
+                        metrics2, ring2)
             return dags, bstate, last_srv, key, qt, qv, fires, done + 1
 
         init = (dags, bank_lib.BankState(have=have, credit=credit, sent=sent),
                 last_srv, key, qtime, qvalid, jnp.zeros_like(qseq),
-                jnp.int32(0))
-        dags, bstate, last_srv, key, qt, qv, _fires, done = (
-            jax.lax.while_loop(cond, body, init)
-        )
-        return dags, bstate, last_srv, key, qt, qv, done
+                jnp.int32(0)) + tuple(obs_carry)
+        out = jax.lax.while_loop(cond, body, init)
+        dags, bstate, last_srv, key, qt, qv, _fires, done = out[:8]
+        return (dags, bstate, last_srv, key, qt, qv, done) + out[8:]
 
     return jax.jit(advance)
 

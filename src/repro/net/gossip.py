@@ -20,8 +20,19 @@ window host-side and runs ONE jitted ``lax.scan`` over it (PRNG keys split
 inside the scan, so a batched window is bitwise the sequential ticks), and
 ``converge()`` runs the whole fixpoint iteration in ONE jitted
 ``lax.while_loop`` whose predicate (replicas synced / progress stalled) is
-evaluated on device. ``GossipNetwork.device_calls`` counts dispatches so
-benchmarks can report the batching win.
+evaluated on device. Every state-advancing device call routes through the
+``GossipNetwork._dispatch`` funnel — tick advance, event advance, the bank
+variants, converge, and commit accounting alike — so ``device_calls`` is
+the complete dispatch count benchmarks report (``dispatch_counts`` keeps
+the per-entry-point breakdown).
+
+Telemetry: constructed with ``obs_cfg=repro.obs.ObsConfig(...)``, the
+jitted loops thread device-resident collectors (metric accumulators + an
+event trace ring, ``repro.obs``) through their carries and the network
+grows ``obs_report()`` / ``trace_host()``. Collection is a pure read —
+same PRNG splits, bitwise-identical trajectory — and ``obs_cfg=None``
+(the default) keeps every jitted program literally unchanged; both claims
+are property-tested in ``tests/test_obs.py``.
 
 Per-edge behavior (unchanged semantics):
 
@@ -426,39 +437,74 @@ def _bank_tick_for(impl: str, bank_impl, mesh):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_bank_jit(impl: str, bank_impl, mesh=None):
+def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None):
     """Tick-batched advance with the bank gossiped: the same ONE-``lax.scan``
     window as ``_advance_jit`` — same PRNG splits, same edge samples — with
-    the transport state threaded through the carry."""
+    the transport state threaded through the carry. ``obs`` threads the
+    telemetry carry too (``obs=None`` keeps the untouched program); the
+    bank run additionally samples chunk lag / byte totals and records a
+    DRAIN trace span per link that moved payload."""
     tick = _bank_tick_for(impl, bank_impl, mesh)
 
+    if obs is None:
+        def advance(dags, bstate, digest, key, ticks, part_active, adj, drop,
+                    stride, part_mask, nbr_idx, nbr_valid, cap_bytes,
+                    chunk_bytes):
+            def body(carry, xs):
+                dags, bstate, key = carry
+                tick_i, pact = xs
+                key, sub = jax.random.split(key)
+                pm = jnp.where(pact, part_mask, True)
+                edges = _sample_edges(sub, tick_i, pm, adj, drop, stride)
+                dags, bstate = tick(dags, bstate, digest, edges, nbr_idx,
+                                    nbr_valid, cap_bytes, chunk_bytes)
+                return (dags, bstate, key), None
+
+            (dags, bstate, key), _ = jax.lax.scan(
+                body, (dags, bstate, key), (ticks, part_active)
+            )
+            return dags, bstate, key
+
+        return jax.jit(advance)
+
+    from repro import obs as obs_lib
+
     def advance(dags, bstate, digest, key, ticks, part_active, adj, drop,
-                stride, part_mask, nbr_idx, nbr_valid, cap_bytes, chunk_bytes):
+                stride, part_mask, nbr_idx, nbr_valid, cap_bytes, chunk_bytes,
+                metrics, ring, period):
         def body(carry, xs):
-            dags, bstate, key = carry
+            dags, bstate, key, metrics, ring = carry
             tick_i, pact = xs
             key, sub = jax.random.split(key)
             pm = jnp.where(pact, part_mask, True)
             edges = _sample_edges(sub, tick_i, pm, adj, drop, stride)
-            dags, bstate = tick(dags, bstate, digest, edges, nbr_idx,
-                                nbr_valid, cap_bytes, chunk_bytes)
-            return (dags, bstate, key), None
+            new, newb = tick(dags, bstate, digest, edges, nbr_idx,
+                             nbr_valid, cap_bytes, chunk_bytes)
+            t = (tick_i.astype(jnp.float32) + 1.0) * period
+            metrics, ring = obs_lib.observe_round(
+                obs, metrics, ring, t, dags, new, live_edges=edges,
+                bytes_delta=newb.sent - bstate.sent, bstate=newb,
+                digest=digest, bank_impl=bank_impl,
+            )
+            return (new, newb, key, metrics, ring), None
 
-        (dags, bstate, key), _ = jax.lax.scan(
-            body, (dags, bstate, key), (ticks, part_active)
+        (dags, bstate, key, metrics, ring), _ = jax.lax.scan(
+            body, (dags, bstate, key, metrics, ring), (ticks, part_active)
         )
-        return dags, bstate, key
+        return dags, bstate, key, metrics, ring
 
     return jax.jit(advance)
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_bank_jit(impl: str, bank_impl, mesh=None):
+def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None):
     """Fixpoint flush with the bank gossiped: one ``lax.while_loop`` whose
     predicate also demands every replica's referenced chunks have ARRIVED —
     rows synced is no longer enough when payloads lag — and whose stall
     check watches the transport state too (credit accrual on a pending link
-    is progress; a full stride cycle with nothing moving is a fixpoint)."""
+    is progress; a full stride cycle with nothing moving is a fixpoint).
+    ``obs`` threads the telemetry carry (``obs=None`` keeps the untouched
+    program)."""
     tick = _bank_tick_for(impl, bank_impl, mesh)
 
     def synced(dags, bstate, digest):
@@ -467,11 +513,44 @@ def _converge_bank_jit(impl: str, bank_impl, mesh=None):
                                             impl=bank_impl)) == 0
         )
 
+    if obs is None:
+        def converge(dags, bstate, digest, key, tick0, part_mask, adj, drop,
+                     stride, limit, stall_limit, nbr_idx, nbr_valid,
+                     cap_bytes, chunk_bytes):
+            def cond(carry):
+                dags, bstate, _key, _tick, stalled, done = carry
+                return (
+                    ~synced(dags, bstate, digest)
+                    & (done < limit)
+                    & (stalled < stall_limit)
+                )
+
+            def body(carry):
+                dags, bstate, key, tick_i, stalled, done = carry
+                key, sub = jax.random.split(key)
+                edges = _sample_edges(sub, tick_i, part_mask, adj, drop, stride)
+                new, newb = tick(dags, bstate, digest, edges, nbr_idx,
+                                 nbr_valid, cap_bytes, chunk_bytes)
+                still = trees_equal((new, newb), (dags, bstate))
+                stalled = jnp.where(still, stalled + 1, 0)
+                return (new, newb, key, tick_i + 1, stalled, done + 1)
+
+            dags, bstate, key, tick_i, _, done = jax.lax.while_loop(
+                cond, body,
+                (dags, bstate, key, tick0, jnp.int32(0), jnp.int32(0)),
+            )
+            return (dags, bstate, key, tick_i, done,
+                    synced(dags, bstate, digest))
+
+        return jax.jit(converge)
+
+    from repro import obs as obs_lib
+
     def converge(dags, bstate, digest, key, tick0, part_mask, adj, drop,
                  stride, limit, stall_limit, nbr_idx, nbr_valid, cap_bytes,
-                 chunk_bytes):
+                 chunk_bytes, metrics, ring, period):
         def cond(carry):
-            dags, bstate, _key, _tick, stalled, done = carry
+            dags, bstate, _key, _tick, stalled, done = carry[:6]
             return (
                 ~synced(dags, bstate, digest)
                 & (done < limit)
@@ -479,20 +558,31 @@ def _converge_bank_jit(impl: str, bank_impl, mesh=None):
             )
 
         def body(carry):
-            dags, bstate, key, tick_i, stalled, done = carry
+            dags, bstate, key, tick_i, stalled, done, metrics, ring = carry
             key, sub = jax.random.split(key)
             edges = _sample_edges(sub, tick_i, part_mask, adj, drop, stride)
             new, newb = tick(dags, bstate, digest, edges, nbr_idx, nbr_valid,
                              cap_bytes, chunk_bytes)
             still = trees_equal((new, newb), (dags, bstate))
             stalled = jnp.where(still, stalled + 1, 0)
-            return (new, newb, key, tick_i + 1, stalled, done + 1)
+            t = (tick_i.astype(jnp.float32) + 1.0) * period
+            metrics, ring = obs_lib.observe_round(
+                obs, metrics, ring, t, dags, new, live_edges=edges,
+                bytes_delta=newb.sent - bstate.sent, bstate=newb,
+                digest=digest, bank_impl=bank_impl,
+            )
+            return (new, newb, key, tick_i + 1, stalled, done + 1,
+                    metrics, ring)
 
-        dags, bstate, key, tick_i, _, done = jax.lax.while_loop(
-            cond, body,
-            (dags, bstate, key, tick0, jnp.int32(0), jnp.int32(0)),
+        dags, bstate, key, tick_i, _, done, metrics, ring = (
+            jax.lax.while_loop(
+                cond, body,
+                (dags, bstate, key, tick0, jnp.int32(0), jnp.int32(0),
+                 metrics, ring),
+            )
         )
-        return dags, bstate, key, tick_i, done, synced(dags, bstate, digest)
+        return (dags, bstate, key, tick_i, done,
+                synced(dags, bstate, digest), metrics, ring)
 
     return jax.jit(converge)
 
@@ -537,7 +627,7 @@ def make_gossip_round(impl: str = "fused", mesh=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_jit(impl: str, mesh=None):
+def _advance_jit(impl: str, mesh=None, obs=None):
     """One jitted lax.scan running a whole advance window of sync ticks.
 
     The PRNG key is split inside the scan exactly like the sequential
@@ -547,27 +637,59 @@ def _advance_jit(impl: str, mesh=None):
     — under a mesh the scan body routes through the shard_map'd round
     (edge sampling stays a replicated global computation, so the sampled
     masks are bitwise the single-device ones).
+
+    ``obs`` (an ``repro.obs.ObsConfig``) threads the telemetry collectors
+    through the scan carry — a pure read sampled after each round, so the
+    dags/key trajectory is bitwise the ``obs=None`` program, whose body
+    below is literally the untouched code.
     """
     apply_round = _round_for(impl, mesh)
 
+    if obs is None:
+        def advance(dags, key, ticks, part_active, adj, drop, stride,
+                    part_mask, nbr_idx, nbr_valid):
+            def body(carry, xs):
+                dags, key = carry
+                tick, pact = xs
+                key, sub = jax.random.split(key)
+                pm = jnp.where(pact, part_mask, True)
+                edges = _sample_edges(sub, tick, pm, adj, drop, stride)
+                return (apply_round(dags, edges, nbr_idx, nbr_valid), key), None
+
+            (dags, key), _ = jax.lax.scan(
+                body, (dags, key), (ticks, part_active)
+            )
+            return dags, key
+
+        return jax.jit(advance)
+
+    from repro import obs as obs_lib   # deferred: repro.obs imports repro.net
+
     def advance(dags, key, ticks, part_active, adj, drop, stride, part_mask,
-                nbr_idx, nbr_valid):
+                nbr_idx, nbr_valid, metrics, ring, period):
         def body(carry, xs):
-            dags, key = carry
+            dags, key, metrics, ring = carry
             tick, pact = xs
             key, sub = jax.random.split(key)
             pm = jnp.where(pact, part_mask, True)
             edges = _sample_edges(sub, tick, pm, adj, drop, stride)
-            return (apply_round(dags, edges, nbr_idx, nbr_valid), key), None
+            new = apply_round(dags, edges, nbr_idx, nbr_valid)
+            t = (tick.astype(jnp.float32) + 1.0) * period
+            metrics, ring = obs_lib.observe_round(
+                obs, metrics, ring, t, dags, new, live_edges=edges
+            )
+            return (new, key, metrics, ring), None
 
-        (dags, key), _ = jax.lax.scan(body, (dags, key), (ticks, part_active))
-        return dags, key
+        (dags, key, metrics, ring), _ = jax.lax.scan(
+            body, (dags, key, metrics, ring), (ticks, part_active)
+        )
+        return dags, key, metrics, ring
 
     return jax.jit(advance)
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_jit(impl: str, mesh=None):
+def _converge_jit(impl: str, mesh=None, obs=None):
     """Device-resident fixpoint flush: ONE jitted lax.while_loop.
 
     The predicate — not yet synced, tick budget left, progress not stalled
@@ -575,13 +697,45 @@ def _converge_jit(impl: str, mesh=None):
     dispatched a sync round, an equality check, and a synced check per tick.
     Under a mesh the loop body routes through the shard_map'd round; the
     predicate's reductions are global (GSPMD inserts the collectives).
+    ``obs`` threads the telemetry carry exactly as in ``_advance_jit``
+    (``obs=None`` keeps the untouched program; a flush has no timeline, so
+    its samples sit at the tick arithmetic's ``(tick + 1) * period``).
     """
     apply_round = _round_for(impl, mesh)
 
-    def converge(dags, key, tick, part_mask, adj, drop, stride, limit, stall_limit,
-                 nbr_idx, nbr_valid):
+    if obs is None:
+        def converge(dags, key, tick, part_mask, adj, drop, stride, limit,
+                     stall_limit, nbr_idx, nbr_valid):
+            def cond(carry):
+                dags, _key, _tick, stalled, done = carry
+                return (
+                    ~replica_lib.replicas_synced(dags)
+                    & (done < limit)
+                    & (stalled < stall_limit)
+                )
+
+            def body(carry):
+                dags, key, tick, stalled, done = carry
+                key, sub = jax.random.split(key)
+                edges = _sample_edges(sub, tick, part_mask, adj, drop, stride)
+                new = apply_round(dags, edges, nbr_idx, nbr_valid)
+                stalled = jnp.where(trees_equal(new, dags), stalled + 1, 0)
+                return (new, key, tick + 1, stalled, done + 1)
+
+            dags, key, tick, _, done = jax.lax.while_loop(
+                cond, body,
+                (dags, key, tick, jnp.int32(0), jnp.int32(0)),
+            )
+            return dags, key, tick, done, replica_lib.replicas_synced(dags)
+
+        return jax.jit(converge)
+
+    from repro import obs as obs_lib
+
+    def converge(dags, key, tick, part_mask, adj, drop, stride, limit,
+                 stall_limit, nbr_idx, nbr_valid, metrics, ring, period):
         def cond(carry):
-            dags, _key, _tick, stalled, done = carry
+            dags, _key, _tick, stalled, done = carry[:5]
             return (
                 ~replica_lib.replicas_synced(dags)
                 & (done < limit)
@@ -589,18 +743,23 @@ def _converge_jit(impl: str, mesh=None):
             )
 
         def body(carry):
-            dags, key, tick, stalled, done = carry
+            dags, key, tick, stalled, done, metrics, ring = carry
             key, sub = jax.random.split(key)
             edges = _sample_edges(sub, tick, part_mask, adj, drop, stride)
             new = apply_round(dags, edges, nbr_idx, nbr_valid)
             stalled = jnp.where(trees_equal(new, dags), stalled + 1, 0)
-            return (new, key, tick + 1, stalled, done + 1)
+            t = (tick.astype(jnp.float32) + 1.0) * period
+            metrics, ring = obs_lib.observe_round(
+                obs, metrics, ring, t, dags, new, live_edges=edges
+            )
+            return (new, key, tick + 1, stalled, done + 1, metrics, ring)
 
-        dags, key, tick, _, done = jax.lax.while_loop(
+        dags, key, tick, _, done, metrics, ring = jax.lax.while_loop(
             cond, body,
-            (dags, key, tick, jnp.int32(0), jnp.int32(0)),
+            (dags, key, tick, jnp.int32(0), jnp.int32(0), metrics, ring),
         )
-        return dags, key, tick, done, replica_lib.replicas_synced(dags)
+        return (dags, key, tick, done, replica_lib.replicas_synced(dags),
+                metrics, ring)
 
     return jax.jit(converge)
 
@@ -638,6 +797,7 @@ class GossipNetwork:
         partition: Optional[PartitionSchedule] = None,
         mesh=None,
         bank_cfg: Optional[BankGossipConfig] = None,
+        obs_cfg=None,
     ):
         n = top.num_nodes
         self.topology = top
@@ -645,6 +805,7 @@ class GossipNetwork:
         self.partition = partition
         self.mesh = mesh
         self.bank_cfg = bank_cfg
+        self.obs_cfg = obs_cfg
         # init_replicas validates the mesh and shards the receiver axis
         self.replicas = replica_lib.init_replicas(dag, bank, n, mesh=mesh)
         if bank_cfg is not None:
@@ -710,8 +871,21 @@ class GossipNetwork:
             )
         self.tick = 0                # global tick index (drives strides)
         self.rounds_run = 0          # ticks / event batches actually executed
-        self.device_calls = 0        # jitted sync dispatches issued
+        self.device_calls = 0        # jitted dispatches issued (_dispatch)
+        self.dispatch_counts = {}    # per-entry-point dispatch breakdown
         self.events_processed = 0    # event batches fired (engine="events")
+        if obs_cfg is not None:
+            # telemetry carries (repro.obs): device-resident, threaded
+            # through every jitted loop below as pure reads
+            from repro import obs as obs_lib
+            self._metrics = obs_lib.init_metrics(n, obs_cfg)
+            self._ring = obs_lib.init_trace(obs_cfg.trace_capacity)
+            self._obs_period = jnp.float32(max(cfg.sync_period, 0.0))
+            self._host_events = []        # (t, kind, src, dst, arg) spans
+            self._part_logged = [False, False]
+            if mesh is not None:
+                self._metrics = mesh_lib.replicate(self._metrics, mesh)
+                self._ring = mesh_lib.replicate(self._ring, mesh)
         period = cfg.sync_period
         self._next_tick_t = period if period > 0 else 0.0
         if cfg.engine not in ("ticks", "events"):
@@ -776,7 +950,8 @@ class GossipNetwork:
         if self.bank_cfg is None:
             return
         bstate = self.replicas.bank_state
-        have, self._digest = _bank_commit_jit(
+        have, self._digest = self._dispatch(
+            "bank_commit", _bank_commit_jit,
             bstate.have, self._digest, params,
             jnp.asarray(slot, jnp.int32), jnp.asarray(node_id, jnp.int32),
         )
@@ -821,6 +996,70 @@ class GossipNetwork:
             replica_lib.missing_vs_union_jit(self.replicas.dags, union)
         )
 
+    # --- telemetry (only when constructed with obs_cfg) ---------------------
+
+    def trace_host(self, t, kind, src, dst, arg=0.0) -> None:
+        """Buffer a host-side trace span (PUBLISH/COMMIT/PARTITION — events
+        the FL driver already knows host-side, so recording them costs zero
+        device dispatches). Merged with the device ring at drain. No-op
+        without telemetry."""
+        if self.obs_cfg is not None and self.obs_cfg.trace:
+            self._host_events.append(
+                (float(t), int(kind), int(src), int(dst), float(arg))
+            )
+
+    def _note_partition(self, t: float) -> None:
+        """Record the partition's begin/heal transitions once each, the
+        first time the clock reaches them."""
+        if self.obs_cfg is None or self.partition is None:
+            return
+        from repro.obs import trace as obs_trace
+        p = self.partition
+        if not self._part_logged[0] and t >= p.t_start:
+            self._part_logged[0] = True
+            self.trace_host(p.t_start, obs_trace.KIND_PARTITION, -1, -1, 1.0)
+        if not self._part_logged[1] and t >= p.t_end:
+            self._part_logged[1] = True
+            self.trace_host(p.t_end, obs_trace.KIND_PARTITION, -1, -1, 0.0)
+
+    def obs_report(self):
+        """Drain the in-loop collectors into a host-side ``ObsReport``
+        (``repro.obs.export``) — metric series truncated to the samples
+        taken, the trace ring merged with buffered host spans, dispatch
+        counts, and final-state scalars. ``None`` without telemetry."""
+        if self.obs_cfg is None:
+            return None
+        from repro import obs as obs_lib
+        from repro.obs import trace as obs_trace
+        m = self._metrics
+        taken = int(min(int(m.cursor), m.t.shape[0]))
+        series = {
+            "t": np.asarray(m.t, np.float64)[:taken],
+            "tips": np.asarray(m.tips, np.int64)[:taken],
+            "staleness": np.asarray(m.staleness, np.int64)[:taken],
+            "rows_delta": np.asarray(m.rows_delta, np.int64)[:taken],
+            "chunk_lag": np.asarray(m.chunk_lag, np.int64)[:taken],
+            "bytes_total": np.asarray(m.bytes_total, np.float64)[:taken],
+        }
+        final = {
+            "bytes_sent": self.bytes_sent(),
+            "chunk_lag": float(self.missing_chunks().max()),
+            "staleness": float(self.missing_rows().max()),
+        }
+        return obs_lib.ObsReport(
+            num_nodes=self.topology.num_nodes,
+            engine=self.cfg.engine,
+            rounds=int(m.rounds),
+            series=series,
+            rows_merged=np.asarray(m.rows_merged, np.int64),
+            link_bytes=np.asarray(m.link_bytes, np.float64),
+            samples_dropped=int(m.dropped),
+            trace=obs_trace.drain(self._ring, self._host_events),
+            trace_dropped=int(self._ring.dropped),
+            dispatch_counts=dict(self.dispatch_counts),
+            final=final,
+        )
+
     # --- the clock ---------------------------------------------------------
 
     def _mask_at(self, t: float):
@@ -828,12 +1067,32 @@ class GossipNetwork:
             return self._part_mask
         return self._all_mask
 
+    def _dispatch(self, label: str, fn, *args):
+        """Issue ONE jitted device call through the counting funnel.
+
+        EVERY state-advancing dispatch (tick advance, event advance, bank
+        variants, converge, commit accounting) routes through here, so
+        ``device_calls`` — what the ``dispatch_batching`` bench reports —
+        counts them all instead of the hand-instrumented subset it used to
+        see; ``dispatch_counts`` keeps the per-entry-point breakdown. With
+        telemetry on, the call is wrapped in a
+        ``jax.profiler.TraceAnnotation`` so device profiles name the
+        overlay's phases.
+        """
+        self.device_calls += 1
+        self.dispatch_counts[label] = self.dispatch_counts.get(label, 0) + 1
+        if self.obs_cfg is not None and self.obs_cfg.annotate:
+            with jax.profiler.TraceAnnotation(f"repro.net.{label}"):
+                return fn(*args)
+        return fn(*args)
+
     def _run_ticks(self, ticks, part_active) -> None:
         """Execute a batch of sync ticks as ONE jitted device call."""
         if self.bank_cfg is not None:
-            dags, bstate, self._key = _advance_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.mesh
-            )(
+            fn = _advance_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg
+            )
+            args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,
                 self._key,
                 jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
@@ -841,18 +1100,36 @@ class GossipNetwork:
                 self._nbr_idx, self._nbr_valid,
                 self._cap_bytes, self._chunk_bytes,
             )
+            if self.obs_cfg is None:
+                dags, bstate, self._key = self._dispatch(
+                    "advance_bank", fn, *args
+                )
+            else:
+                dags, bstate, self._key, self._metrics, self._ring = (
+                    self._dispatch(
+                        "advance_bank", fn, *args,
+                        self._metrics, self._ring, self._obs_period,
+                    )
+                )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            dags, self._key = _advance_jit(self.cfg.impl, self.mesh)(
+            fn = _advance_jit(self.cfg.impl, self.mesh, self.obs_cfg)
+            args = (
                 self.replicas.dags, self._key,
                 jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
                 self._adj, self._drop, self._stride, self._part_mask,
                 self._nbr_idx, self._nbr_valid,
             )
+            if self.obs_cfg is None:
+                dags, self._key = self._dispatch("advance", fn, *args)
+            else:
+                dags, self._key, self._metrics, self._ring = self._dispatch(
+                    "advance", fn, *args,
+                    self._metrics, self._ring, self._obs_period,
+                )
             self.replicas = self.replicas._replace(dags=dags)
         self.tick += len(ticks)
         self.rounds_run += len(ticks)
-        self.device_calls += 1
 
     def _tick_once(self, t: float) -> None:
         """One sync tick at simulation time ``t`` (a batch of one — the
@@ -869,42 +1146,61 @@ class GossipNetwork:
         limit = jnp.int32(self.cfg.max_events_per_advance)
         fire_cap = jnp.int32(self.cfg.max_ticks_per_advance)
         if self.bank_cfg is not None:
-            dags, bstate, self._last_srv, self._key, qt, qv, done = (
-                events_lib._advance_events_bank_jit(
-                    self.cfg.impl, self.bank_cfg.impl
-                )(
-                    self.replicas.dags, self.replicas.bank_state.have,
-                    self.replicas.bank_state.credit,
-                    self.replicas.bank_state.sent, self._last_srv,
-                    self._digest, self._equeue.time, self._equeue.valid,
-                    self._equeue.kind, self._equeue.src, self._equeue.dst,
-                    self._equeue.seq, self._eislot, self._key,
-                    jnp.float32(t), limit, fire_cap, self._part_mask,
-                    self._part_t0, self._part_t1, self._drop, self._nbr_idx,
-                    self._nbr_valid, self._bw_bytes, self._chunk_bytes,
-                )
+            fn = events_lib._advance_events_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg
             )
+            args = (
+                self.replicas.dags, self.replicas.bank_state.have,
+                self.replicas.bank_state.credit,
+                self.replicas.bank_state.sent, self._last_srv,
+                self._digest, self._equeue.time, self._equeue.valid,
+                self._equeue.kind, self._equeue.src, self._equeue.dst,
+                self._equeue.seq, self._eislot, self._key,
+                jnp.float32(t), limit, fire_cap, self._part_mask,
+                self._part_t0, self._part_t1, self._drop, self._nbr_idx,
+                self._nbr_valid, self._bw_bytes, self._chunk_bytes,
+            )
+            if self.obs_cfg is None:
+                dags, bstate, self._last_srv, self._key, qt, qv, done = (
+                    self._dispatch("advance_events_bank", fn, *args)
+                )
+            else:
+                (dags, bstate, self._last_srv, self._key, qt, qv, done,
+                 self._metrics, self._ring) = self._dispatch(
+                    "advance_events_bank", fn, *args,
+                    self._metrics, self._ring,
+                )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            dags, qt, qv, self._key, done = events_lib._advance_events_jit(
-                self.cfg.impl
-            )(
+            fn = events_lib._advance_events_jit(self.cfg.impl, self.obs_cfg)
+            args = (
                 self.replicas.dags, self._equeue.time, self._equeue.valid,
                 self._equeue.kind, self._equeue.src, self._equeue.dst,
                 self._equeue.seq, self._eislot, self._key, jnp.float32(t),
                 limit, fire_cap, self._part_mask, self._part_t0,
                 self._part_t1, self._drop, self._nbr_idx, self._nbr_valid,
             )
+            if self.obs_cfg is None:
+                dags, qt, qv, self._key, done = self._dispatch(
+                    "advance_events", fn, *args
+                )
+            else:
+                dags, qt, qv, self._key, done, self._metrics, self._ring = (
+                    self._dispatch(
+                        "advance_events", fn, *args,
+                        self._metrics, self._ring,
+                    )
+                )
             self.replicas = self.replicas._replace(dags=dags)
         self._equeue = self._equeue._replace(time=qt, valid=qv)
         self.tick += int(done)
         self.rounds_run += int(done)
         self.events_processed += int(done)
-        self.device_calls += 1
 
     def advance(self, t: float) -> None:
         """Run every sync tick scheduled at or before simulation time ``t``
         as one batched dispatch."""
+        self._note_partition(t)
         if self.cfg.sync_period <= 0:
             self.converge(at_time=t)
             return
@@ -938,6 +1234,7 @@ class GossipNetwork:
         reached — it cannot be while a partition is active or the overlay
         is disconnected.
         """
+        self._note_partition(at_time)
         limit = self.topology.num_nodes * min(self._max_stride, 64)
         stall_limit = min(self._max_stride, 64)
         if self.bank_cfg is not None:
@@ -946,24 +1243,46 @@ class GossipNetwork:
             limit = (self.topology.num_nodes + self._drain_ticks) * min(
                 self._max_stride, 64
             )
-            dags, bstate, self._key, tick, done, synced = _converge_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.mesh
-            )(
+            fn = _converge_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg
+            )
+            args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,
                 self._key, jnp.asarray(self.tick, jnp.int32),
                 self._mask_at(at_time), self._adj, self._drop, self._stride,
                 limit, stall_limit, self._nbr_idx, self._nbr_valid,
                 self._cap_bytes, self._chunk_bytes,
             )
+            if self.obs_cfg is None:
+                dags, bstate, self._key, tick, done, synced = self._dispatch(
+                    "converge_bank", fn, *args
+                )
+            else:
+                (dags, bstate, self._key, tick, done, synced,
+                 self._metrics, self._ring) = self._dispatch(
+                    "converge_bank", fn, *args,
+                    self._metrics, self._ring, self._obs_period,
+                )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            dags, self._key, tick, done, synced = _converge_jit(self.cfg.impl, self.mesh)(
-                self.replicas.dags, self._key, jnp.asarray(self.tick, jnp.int32),
+            fn = _converge_jit(self.cfg.impl, self.mesh, self.obs_cfg)
+            args = (
+                self.replicas.dags, self._key,
+                jnp.asarray(self.tick, jnp.int32),
                 self._mask_at(at_time), self._adj, self._drop, self._stride,
                 limit, stall_limit, self._nbr_idx, self._nbr_valid,
             )
+            if self.obs_cfg is None:
+                dags, self._key, tick, done, synced = self._dispatch(
+                    "converge", fn, *args
+                )
+            else:
+                (dags, self._key, tick, done, synced,
+                 self._metrics, self._ring) = self._dispatch(
+                    "converge", fn, *args,
+                    self._metrics, self._ring, self._obs_period,
+                )
             self.replicas = self.replicas._replace(dags=dags)
         self.tick = int(tick)
         self.rounds_run += int(done)
-        self.device_calls += 1
         return bool(synced)

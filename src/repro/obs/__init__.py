@@ -1,0 +1,77 @@
+"""Device-resident telemetry for the gossip overlay (``repro.obs``).
+
+Collectors that live INSIDE the jitted loops as pytree carries — metric
+accumulators (``repro.obs.metrics``) and an event trace ring
+(``repro.obs.trace``) threaded through the tick advance scan, the
+converge while-loop, and both event-engine advance jits — plus host-side
+export (``repro.obs.export``: Chrome/Perfetto traces, JSONL metrics).
+
+Contract: collection is a PURE READ. Obs-enabled runs split the same PRNG
+keys and produce bitwise the same final state as obs-off runs; obs-off
+(``obs_cfg=None``, the default everywhere) leaves every jitted program
+literally unchanged. ``tests/test_obs.py`` pins both claims over engines,
+round impls, topologies, partitions, the bank, and the mesh.
+
+Entry points: ``GossipNetwork(obs_cfg=ObsConfig(...))``,
+``run_dagfl_gossip(obs=ObsConfig(...))`` -> ``SimResult.extras["obs"]``
+(an ``ObsReport``), and ``scripts/obs_report.py`` for files on disk.
+"""
+import jax.numpy as jnp
+
+from repro.obs import metrics as _metrics_lib
+from repro.obs import trace as _trace_lib
+from repro.obs.export import (ObsReport, chrome_trace, metrics_jsonl_lines,
+                              write_chrome_trace, write_metrics_jsonl)
+from repro.obs.metrics import MetricsState, ObsConfig, init_metrics
+from repro.obs.trace import (KIND_COMMIT, KIND_DELIVER, KIND_DRAIN,
+                             KIND_PARTITION, KIND_PUBLISH, TraceRing,
+                             init_trace)
+
+
+def observe_round(
+    cfg: ObsConfig,
+    metrics: MetricsState,
+    ring: TraceRing,
+    t,                        # () f32 sample instant
+    old_dags,                 # stacked replicas BEFORE the round
+    new_dags,                 # stacked replicas AFTER the round
+    live_edges=None,          # (N, N) bool deliveries that survived
+    bytes_delta=None,         # (N, N) f32 payload bytes moved this round
+    bstate=None,              # post-round BankState (bank runs only)
+    digest=None,
+    bank_impl=None,
+) -> tuple:
+    """THE collector step every obs-enabled loop body runs (jit-safe).
+
+    One metrics accumulation + sample, one DELIVER trace append over the
+    surviving edges (arg = rows the receiver merged), and — when payload
+    moved — one DRAIN append (arg = bytes). Pure read of its inputs: no
+    PRNG, no writes, so threading it through a carry cannot perturb the
+    simulation (the bitwise claim ``tests/test_obs.py`` pins).
+    """
+    delta = _metrics_lib.rows_changed(new_dags, old_dags)
+    metrics = _metrics_lib.update(
+        metrics, cfg, t, new_dags, delta, bstate, digest, bank_impl
+    )
+    if cfg.trace:
+        if live_edges is not None:
+            arg = jnp.broadcast_to(
+                delta[:, None], live_edges.shape
+            ).astype(jnp.float32)
+            ring = _trace_lib.append_edges(
+                ring, t, KIND_DELIVER, live_edges, arg
+            )
+        if bytes_delta is not None:
+            ring = _trace_lib.append_edges(
+                ring, t, KIND_DRAIN, bytes_delta > 0, bytes_delta
+            )
+    return metrics, ring
+
+__all__ = [
+    "ObsConfig", "ObsReport", "MetricsState", "TraceRing",
+    "init_metrics", "init_trace", "observe_round",
+    "chrome_trace", "write_chrome_trace",
+    "metrics_jsonl_lines", "write_metrics_jsonl",
+    "KIND_DELIVER", "KIND_DRAIN", "KIND_PUBLISH", "KIND_COMMIT",
+    "KIND_PARTITION",
+]

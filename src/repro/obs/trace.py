@@ -1,0 +1,145 @@
+"""Fixed-capacity event trace ring for the gossip overlay.
+
+The ``EventQueue`` layout, reused for recording instead of scheduling: a
+trace is stacked arrays ``(t, kind, src, dst, arg)`` plus a write cursor
+and an overflow counter, small enough to ride a ``lax.scan`` /
+``lax.while_loop`` carry. Device-side appends happen per merge round /
+event batch (every live delivery edge and every link that moved payload
+bytes becomes one record); host-side spans (PUBLISH / COMMIT — the FL
+driver knows iteration start and completion instants — and PARTITION
+transitions) are buffered on the host and merged at drain time, so
+recording them costs zero device dispatches.
+
+Overflow policy: the ring KEEPS the first ``capacity`` records and counts
+the rest in ``dropped`` — it never wraps. A wrapped ring silently loses
+the oldest spans, which is exactly the failure mode a post-mortem trace
+exists to avoid; a full ring with a nonzero ``dropped`` is an honest
+"raise ``ObsConfig.trace_capacity``" signal (pinned by
+``tests/test_obs.py``).
+
+Record kinds (``arg`` meaning per kind):
+
+  ``KIND_DELIVER``    anti-entropy delivery src -> dst survived drop/
+                      partition; arg = rows the receiver merged that round;
+  ``KIND_DRAIN``      payload bytes moved src -> dst; arg = bytes;
+  ``KIND_PUBLISH``    node began an iteration (host record at t0);
+                      arg = its duration h (seconds), so the exporter can
+                      draw the iteration span without pairing records;
+  ``KIND_COMMIT``     node landed its transaction (host record at t1);
+                      arg = global sequence number;
+  ``KIND_PARTITION``  overlay partition transition (host record);
+                      arg = 1.0 begin / 0.0 heal, src = dst = -1.
+
+``repro.obs.export`` turns a drained ring into Chrome trace-event JSON
+(one Perfetto track per node) and the metrics series into JSONL.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+KIND_DELIVER = 0
+KIND_DRAIN = 1
+KIND_PUBLISH = 2
+KIND_COMMIT = 3
+KIND_PARTITION = 4
+
+KIND_NAMES = {
+    KIND_DELIVER: "deliver",
+    KIND_DRAIN: "drain",
+    KIND_PUBLISH: "publish",
+    KIND_COMMIT: "commit",
+    KIND_PARTITION: "partition",
+}
+
+
+class TraceRing(NamedTuple):
+    """Stacked-array trace ring (shapes static per capacity C)."""
+
+    t: jnp.ndarray        # (C,) f32 record instant
+    kind: jnp.ndarray     # (C,) i32 KIND_*
+    src: jnp.ndarray      # (C,) i32 sender / acting node (-1 = overlay)
+    dst: jnp.ndarray      # (C,) i32 receiver / acting node (-1 = overlay)
+    arg: jnp.ndarray      # (C,) f32 kind-specific payload
+    cursor: jnp.ndarray   # ()   i32 records attempted (monotone)
+    dropped: jnp.ndarray  # ()   i32 records past capacity (dropped)
+
+
+def init_trace(capacity: int) -> TraceRing:
+    c = int(capacity)
+    return TraceRing(
+        t=jnp.zeros((c,), jnp.float32),
+        kind=jnp.full((c,), -1, jnp.int32),
+        src=jnp.full((c,), -1, jnp.int32),
+        dst=jnp.full((c,), -1, jnp.int32),
+        arg=jnp.zeros((c,), jnp.float32),
+        cursor=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def append_edges(ring: TraceRing, t, kind: int, mask, arg) -> TraceRing:
+    """Append one record per True edge of ``mask`` (jit-safe, O(N^2)).
+
+    ``mask`` is (N, N) bool in the overlay's [receiver, sender] layout;
+    ``arg`` broadcasts against it. Active edges take consecutive slots in
+    flat index order (deterministic — a prefix sum assigns positions);
+    edges landing past capacity scatter out of bounds and are DROPPED
+    (``mode="drop"``), with ``dropped`` counting them.
+    """
+    n = mask.shape[0]
+    cap = ring.t.shape[0]
+    flat = mask.reshape(-1)
+    vals = jnp.broadcast_to(arg, mask.shape).reshape(-1).astype(jnp.float32)
+    fi = flat.astype(jnp.int32)
+    pos = jnp.cumsum(fi) - fi
+    idx = ring.cursor + pos
+    # inactive edges and overflow both target slot `cap` — out of bounds,
+    # so the scatters discard them; in-bounds active slots are unique
+    slot = jnp.where(flat & (idx < cap), idx, cap)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    dst_ids = jnp.broadcast_to(ids[:, None], (n, n)).reshape(-1)
+    src_ids = jnp.broadcast_to(ids[None, :], (n, n)).reshape(-1)
+    return TraceRing(
+        t=ring.t.at[slot].set(jnp.asarray(t, jnp.float32), mode="drop"),
+        kind=ring.kind.at[slot].set(jnp.int32(kind), mode="drop"),
+        src=ring.src.at[slot].set(src_ids, mode="drop"),
+        dst=ring.dst.at[slot].set(dst_ids, mode="drop"),
+        arg=ring.arg.at[slot].set(vals, mode="drop"),
+        cursor=ring.cursor + jnp.sum(fi),
+        dropped=ring.dropped + jnp.sum(fi * (idx >= cap).astype(jnp.int32)),
+    )
+
+
+def drain(ring: TraceRing, host_events=()) -> dict:
+    """Pull the ring to host and merge buffered host-side records.
+
+    ``host_events`` is an iterable of ``(t, kind, src, dst, arg)`` tuples
+    (PUBLISH/COMMIT/PARTITION — recorded host-side for free). Returns
+    ``{"t", "kind", "src", "dst", "arg"}`` numpy arrays sorted by
+    ``(t, kind)`` — the same lexicographic tie order the event engine pops
+    in — plus nothing else; ``ring.dropped`` is the caller's to report.
+    """
+    n = int(min(int(ring.cursor), ring.t.shape[0]))
+    t = np.asarray(ring.t)[:n]
+    kind = np.asarray(ring.kind)[:n]
+    src = np.asarray(ring.src)[:n]
+    dst = np.asarray(ring.dst)[:n]
+    arg = np.asarray(ring.arg)[:n]
+    if host_events:
+        h = np.asarray(list(host_events), np.float64).reshape(-1, 5)
+        t = np.concatenate([t.astype(np.float64), h[:, 0]])
+        kind = np.concatenate([kind, h[:, 1].astype(np.int32)])
+        src = np.concatenate([src, h[:, 2].astype(np.int32)])
+        dst = np.concatenate([dst, h[:, 3].astype(np.int32)])
+        arg = np.concatenate([arg.astype(np.float64), h[:, 4]])
+    order = np.lexsort((kind, t))
+    return {
+        "t": np.asarray(t, np.float64)[order],
+        "kind": kind[order],
+        "src": src[order],
+        "dst": dst[order],
+        "arg": np.asarray(arg, np.float64)[order],
+    }

@@ -1,0 +1,414 @@
+"""In-loop telemetry (`repro.obs`).
+
+Pins the acceptance invariants of the observability layer:
+
+* ZERO PERTURBATION: an obs-instrumented run — metric accumulators and
+  the trace ring threaded through every jitted loop as scan/while
+  carries — is BITWISE the obs-off run (final ReplicaSet, bank state,
+  and PRNG key alike), property-tested over engines, round impls,
+  overlays, and partition schedules, plus a mesh-sharded subprocess run;
+* overflow is honest: both the metrics series and the trace ring keep
+  the FIRST N records and count the rest in ``dropped`` — no silent
+  wraparound;
+* the drained Chrome trace round-trips ``json.loads`` with monotone
+  per-track timestamps, and the host-side PUBLISH/COMMIT records account
+  every driver iteration;
+* every jitted dispatch routes through the ``_dispatch`` counting funnel
+  (``device_calls`` == the sum of the per-entry-point breakdown both
+  engines expose in ``SimResult.extras``).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from collections import defaultdict
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dag as dag_lib
+from repro.net import gossip as gossip_lib
+from repro.net import replica as replica_lib
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.obs import (KIND_COMMIT, KIND_DELIVER, KIND_PARTITION,
+                       KIND_PUBLISH, ObsConfig, chrome_trace,
+                       metrics_jsonl_lines)
+from repro.obs import trace as trace_lib
+
+CAP, K = 32, 2
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def genesis(num_nodes):
+    d = dag_lib.empty_dag(CAP, K, num_nodes + 1)
+    return dag_lib.publish(
+        d, jnp.asarray(num_nodes, jnp.int32), jnp.float32(0.0),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(0, jnp.int32),
+    )
+
+
+def make_net(top, engine="ticks", obs=None, bank_cfg=None, impl="fused",
+             partition=None, seed=7, sync_period=1.0):
+    return gossip_lib.GossipNetwork(
+        genesis(top.num_nodes), bank=jnp.zeros((CAP, 8)), top=top,
+        cfg=gossip_lib.GossipConfig(sync_period=sync_period, seed=seed,
+                                    impl=impl, engine=engine),
+        partition=partition, bank_cfg=bank_cfg, obs_cfg=obs,
+    )
+
+
+def publish_on(net, node, seq, t):
+    d = replica_lib.publish_local(
+        net.read(node), seq, jnp.asarray(node, jnp.int32), jnp.float32(t),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(seq % CAP, jnp.int32),
+    )
+    net.write(node, d)
+    if net.bank_cfg is not None:
+        net.bank_commit(node, seq % CAP, jnp.full((8,), float(seq)))
+
+
+def assert_dags_equal(a, b, msg=""):
+    for name in dag_lib.DagState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+            err_msg=f"{msg}{name}",
+        )
+
+
+def assert_nets_bitwise(a, b, msg=""):
+    assert_dags_equal(a.replicas.dags, b.replicas.dags, msg=msg)
+    np.testing.assert_array_equal(
+        np.asarray(a._key), np.asarray(b._key), err_msg=f"{msg}key"
+    )
+    if a.bank_cfg is not None:
+        for f in ("have", "credit", "sent"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.replicas.bank_state, f)),
+                np.asarray(getattr(b.replicas.bank_state, f)),
+                err_msg=f"{msg}{f}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance invariant: obs-on is bitwise obs-off
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+@pytest.mark.parametrize("bank", [None, BankGossipConfig(chunks_per_slot=4)])
+def test_obs_on_bitwise_obs_off_unit(engine, bank):
+    part = gossip_lib.PartitionSchedule(
+        assignment=topo.split_halves(6), t_start=1.5, t_end=3.5,
+    )
+    top = topo.ring(6, link_latency=1.0, drop=0.3, seed=3)
+    a = make_net(top, engine, obs=None, bank_cfg=bank, partition=part)
+    b = make_net(top, engine, obs=ObsConfig(), bank_cfg=bank, partition=part)
+    publish_on(a, 0, 1, 0.3)
+    publish_on(b, 0, 1, 0.3)
+    for t in (1.0, 2.5, 6.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+    assert a.converge(at_time=20.0) == b.converge(at_time=20.0)
+    assert_nets_bitwise(a, b, msg="converge:")
+    rep = b.obs_report()
+    assert rep.rounds > 0 and len(rep.series["t"]) == rep.rounds
+    assert len(rep.trace["t"]) > 0 and rep.trace_dropped == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    overlay=st.sampled_from(["ring", "er", "star"]),
+    engine=st.sampled_from(["ticks", "events"]),
+    impl=st.sampled_from(["fused", "scan"]),
+    split=st.booleans(),
+)
+def test_property_obs_on_bitwise_obs_off(seed, overlay, engine, impl, split):
+    """Property (acceptance): collection is a pure read — threading the
+    collectors through the carries perturbs nothing, over any overlay,
+    engine, round impl, partition schedule, and publish interleaving."""
+    n = 8
+    builders = {
+        "ring": lambda: topo.ring(n, link_latency=1.0, drop=0.3,
+                                  seed=seed % 997),
+        "er": lambda: topo.erdos_renyi(n, 0.4, link_latency=1.0, drop=0.3,
+                                       seed=seed % 997),
+        "star": lambda: topo.star(n, link_latency=1.0, drop=0.3),
+    }
+    part = (
+        gossip_lib.PartitionSchedule(
+            assignment=topo.split_halves(n), t_start=1.5, t_end=3.5,
+        ) if split else None
+    )
+    top = builders[overlay]()
+    a = make_net(top, engine, obs=None, impl=impl, partition=part,
+                 seed=seed % 1013)
+    b = make_net(top, engine, obs=ObsConfig(), impl=impl, partition=part,
+                 seed=seed % 1013)
+    rng = np.random.default_rng(seed)
+    for seq in range(1, 4):
+        node = int(rng.integers(0, n))
+        publish_on(a, node, seq, 0.1 * seq)
+        publish_on(b, node, seq, 0.1 * seq)
+    for t in (1.0, 2.5, 5.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+
+
+def test_obs_mesh_bitwise_in_subprocess():
+    """Runs on every lane: forces 8 host devices in a child process and
+    checks that the mesh-sharded path with collectors on stays bitwise the
+    obs-off mesh run AND the single-device obs-off run — obs rides the
+    same GSPMD reductions as every other cross-replica fold."""
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import dag as dag_lib
+        from repro.net import gossip as G, mesh as M, replica as R
+        from repro.net import topology as topo
+        from repro.obs import ObsConfig
+        assert jax.device_count() == 8, jax.device_count()
+        CAP, K = 16, 2
+        d = dag_lib.empty_dag(CAP, K, 17)
+        d = dag_lib.publish(d, jnp.asarray(16, jnp.int32), jnp.float32(0.0),
+            jnp.full((K,), dag_lib.NO_TX, jnp.int32), jnp.float32(0.5),
+            jnp.float32(0.0), jnp.asarray(0, jnp.int32))
+        def net(mesh, obs):
+            return G.GossipNetwork(d, bank=jnp.zeros((CAP, 4)),
+                top=topo.ring(16, drop=0.2, seed=1),
+                cfg=G.GossipConfig(sync_period=1.0, seed=5), mesh=mesh,
+                obs_cfg=obs)
+        mesh = M.make_gossip_mesh(nodes=2, model=4)
+        a, b, c = net(None, None), net(mesh, None), net(mesh, ObsConfig())
+        for n_ in (a, b, c):
+            dd = R.publish_local(n_.read(3), 1, jnp.asarray(3, jnp.int32),
+                jnp.float32(0.1), jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+                jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(1, jnp.int32))
+            n_.write(3, dd)
+        a.advance(4.0); b.advance(4.0); c.advance(4.0)
+        assert (a.converge(at_time=50.0) == b.converge(at_time=50.0)
+                == c.converge(at_time=50.0))
+        for f in dag_lib.DagState._fields:
+            for other, tag in ((b, "mesh"), (c, "mesh+obs")):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a.replicas.dags, f)),
+                    np.asarray(getattr(other.replicas.dags, f)),
+                    err_msg=tag + ":" + f)
+        np.testing.assert_array_equal(np.asarray(b._key), np.asarray(c._key))
+        rep = c.obs_report()
+        assert rep.rounds > 0 and len(rep.series["t"]) == rep.rounds
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=1200,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Overflow policy: keep the first N, count the rest, never wrap
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ring_overflow_counts_instead_of_wrapping():
+    ring = trace_lib.init_trace(4)
+    mask = jnp.asarray([[False, True, True], [True, False, False],
+                        [False, False, False]])
+    ring = trace_lib.append_edges(ring, 1.0, KIND_DELIVER, mask, 2.0)
+    assert int(ring.cursor) == 3 and int(ring.dropped) == 0
+    ring = trace_lib.append_edges(ring, 2.0, KIND_DELIVER, mask, 5.0)
+    assert int(ring.cursor) == 6
+    assert int(ring.dropped) == 2                 # two records past capacity
+    # first-N policy: slots 0-2 hold the t=1 records untouched, slot 3 the
+    # first t=2 record — the t=1 prefix was NOT overwritten
+    np.testing.assert_array_equal(np.asarray(ring.t), [1.0, 1.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(ring.arg), [2.0, 2.0, 2.0, 5.0])
+    # flat-index order assigns slots deterministically: (0,1), (0,2), (1,0)
+    np.testing.assert_array_equal(np.asarray(ring.src), [1, 2, 0, 1])
+    np.testing.assert_array_equal(np.asarray(ring.dst), [0, 0, 1, 0])
+    rec = trace_lib.drain(ring)
+    assert len(rec["t"]) == 4                     # drain never exceeds cap
+
+
+def test_metrics_series_overflow_counts_instead_of_wrapping():
+    obs = ObsConfig(series_capacity=2)
+    net = make_net(topo.ring(4, link_latency=1.0), obs=obs)
+    publish_on(net, 0, 1, 0.1)
+    net.advance(5.0)                              # 5 rounds into 2 slots
+    rep = net.obs_report()
+    assert rep.rounds == 5
+    assert rep.samples_dropped == 3
+    assert len(rep.series["t"]) == 2
+    np.testing.assert_array_equal(rep.series["t"], [1.0, 2.0])   # first two
+
+
+def test_obs_trace_false_skips_ring_but_keeps_metrics():
+    obs = ObsConfig(trace=False)
+    net = make_net(topo.ring(4, link_latency=1.0), obs=obs)
+    publish_on(net, 0, 1, 0.1)
+    net.advance(3.0)
+    rep = net.obs_report()
+    assert rep.rounds == 3 and len(rep.series["t"]) == 3
+    assert len(rep.trace["t"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics semantics on a known schedule
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_series_tracks_known_propagation():
+    """One row on a loss-free 4-ring: neighbors merge at t=1 (2 rows
+    delta), the far node at t=2 (1 row), then quiescence — and the
+    staleness series collapses to 0 exactly when the overlay syncs."""
+    net = make_net(topo.ring(4, link_latency=1.0), obs=ObsConfig())
+    publish_on(net, 0, 1, 0.1)
+    net.advance(3.0)
+    rep = net.obs_report()
+    np.testing.assert_array_equal(rep.series["t"], [1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(rep.series["rows_delta"], [2, 1, 0])
+    np.testing.assert_array_equal(rep.series["staleness"], [1, 0, 0])
+    assert int(rep.rows_merged.sum()) == 3        # 3 replica merges in all
+    deliver = rep.trace["kind"] == KIND_DELIVER
+    assert deliver.sum() == net.topology.adjacency.sum() * 3   # per round
+
+
+def test_bank_metrics_reach_the_series():
+    cfg = BankGossipConfig(chunks_per_slot=4)
+    net = make_net(topo.ring(2, link_latency=1.0, bandwidth=64.0),
+                   obs=ObsConfig(), bank_cfg=cfg)
+    publish_on(net, 0, 1, 0.2)
+    net.advance(6.0)
+    rep = net.obs_report()
+    assert rep.series["chunk_lag"].max() > 0      # backlog was visible
+    assert rep.series["bytes_total"][-1] > 0      # and the byte meter ran
+    assert rep.final["chunk_lag"] == 0.0          # fully drained by t=6
+    assert float(rep.link_bytes.sum()) == rep.final["bytes_sent"]
+    drain_mask = rep.trace["kind"] == trace_lib.KIND_DRAIN
+    assert drain_mask.sum() > 0
+    assert rep.trace["arg"][drain_mask].sum() == rep.final["bytes_sent"]
+
+
+def test_partition_trace_records_begin_and_heal():
+    part = gossip_lib.PartitionSchedule(
+        assignment=topo.split_halves(6), t_start=1.5, t_end=3.5,
+    )
+    net = make_net(topo.full(6, link_latency=1.0), obs=ObsConfig(),
+                   partition=part)
+    publish_on(net, 0, 1, 0.2)
+    net.advance(6.0)
+    rec = net.obs_report().trace
+    pmask = rec["kind"] == KIND_PARTITION
+    assert pmask.sum() == 2                        # begin + heal, once each
+    np.testing.assert_array_equal(rec["t"][pmask], [1.5, 3.5])
+    np.testing.assert_array_equal(rec["arg"][pmask], [1.0, 0.0])
+    assert (rec["src"][pmask] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Dispatch funnel: device_calls == the per-entry-point breakdown
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine,label", [("ticks", "advance"),
+                                          ("events", "advance_events")])
+def test_dispatch_counts_breakdown(engine, label):
+    net = make_net(topo.ring(4, link_latency=1.0), engine=engine)
+    publish_on(net, 0, 1, 0.1)
+    net.advance(2.0)
+    net.converge(at_time=10.0)
+    assert net.dispatch_counts[label] >= 1
+    assert net.dispatch_counts["converge"] == 1
+    assert net.device_calls == sum(net.dispatch_counts.values())
+
+
+def test_dispatch_counts_cover_bank_commit():
+    net = make_net(topo.ring(4, link_latency=1.0),
+                   bank_cfg=BankGossipConfig(chunks_per_slot=4))
+    publish_on(net, 0, 1, 0.1)                     # publishes + bank_commit
+    net.advance(2.0)
+    assert net.dispatch_counts["bank_commit"] == 1
+    assert net.dispatch_counts["advance_bank"] == 1
+    assert net.device_calls == sum(net.dispatch_counts.values())
+
+
+# ---------------------------------------------------------------------------
+# Export: Chrome trace round-trip + JSONL
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def e2e_report():
+    from repro.fl.experiments import default_dagfl_config, make_cnn_setup
+    from repro.fl.systems import SimConfig, run_dagfl_gossip
+
+    n, iters = 6, 8
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=iters, eval_every=4, seed=0)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=0)
+    res = run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.ring(n, link_latency=1.0, seed=0),
+        gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=0),
+        engine="events", bank_gossip=BankGossipConfig(chunks_per_slot=4),
+        obs=ObsConfig(),
+    )
+    return res, iters
+
+
+def test_e2e_extras_expose_obs_and_dispatch_counts(e2e_report):
+    res, iters = e2e_report
+    rep = res.extras["obs"]
+    assert rep.engine == "events" and rep.rounds > 0
+    assert res.extras["dispatch_counts"]          # breakdown in extras too
+    assert res.extras["device_calls"] == sum(
+        res.extras["dispatch_counts"].values()
+    )
+    # host records account every driver iteration
+    kinds = rep.trace["kind"]
+    assert (kinds == KIND_PUBLISH).sum() == iters
+    assert (kinds == KIND_COMMIT).sum() == iters
+
+
+def test_chrome_trace_roundtrips_with_monotone_tracks(e2e_report):
+    res, _ = e2e_report
+    doc = json.loads(json.dumps(chrome_trace(res.extras["obs"])))
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms" and len(evs) > 0
+    named = [e for e in evs if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len(named) == res.extras["obs"].num_nodes + 1   # nodes + overlay
+    per_track = defaultdict(list)
+    for e in evs:
+        if e["ph"] != "M":
+            assert e["ts"] >= 0 and e.get("dur", 0) >= 0
+            per_track[(e["pid"], e["tid"])].append(e["ts"])
+    assert per_track
+    for track, ts in per_track.items():
+        assert ts == sorted(ts), f"track {track} not monotone"
+
+
+def test_metrics_jsonl_lines_parse(e2e_report):
+    res, _ = e2e_report
+    rep = res.extras["obs"]
+    lines = metrics_jsonl_lines(rep)
+    assert len(lines) == 1 + len(rep.series["t"])
+    head = json.loads(lines[0])
+    assert head["kind"] == "summary" and head["rounds"] == rep.rounds
+    for ln in lines[1:]:
+        row = json.loads(ln)
+        assert row["kind"] == "sample" and set(row) >= {
+            "t", "tips", "staleness", "rows_delta", "chunk_lag", "bytes_total"
+        }
