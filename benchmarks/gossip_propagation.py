@@ -22,8 +22,10 @@ FAILS (exit 1) if the fused round loses bitwise equivalence with the scan
 round, drops below a 2x speedup, the mesh round diverges from the fused
 one, bank gossip at unlimited capacity diverges from the bankless path,
 the event engine's degenerate uniform-delay limit diverges from the tick
-path, an obs-instrumented run diverges from the obs-off path, or the
-warmed obs collectors cost more than 10% wall time — the CI tripwires.
+path, an obs-instrumented run diverges from the obs-off path, the warmed
+obs collectors cost more than 10% wall time, an all-honest fault config
+diverges from the un-faulted path, or a spoofed chunk survives digest
+verification into a gated view — the CI tripwires.
 It also exports the last obs-on run as ``obs_sample.trace.json`` (the
 Perfetto-loadable artifact CI uploads).
 """
@@ -45,6 +47,7 @@ from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
 from repro.net.bank import BankGossipConfig
+from repro.net.faults import ROLE_HONEST, ROLE_SPOOF, FaultConfig
 from repro.obs import ObsConfig, write_chrome_trace
 
 TRACE_SAMPLE_PATH = "obs_sample.trace.json"
@@ -533,6 +536,87 @@ def run_observability(
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Fault injection: faults-off equivalence + the spoof-defense tripwire
+# ---------------------------------------------------------------------------
+
+
+def _run_faulted(n, iterations, seed, engine, faults, bank=None):
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
+                    seed=seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=seed)
+    return run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.full(n, link_latency=1.0, seed=seed),
+        gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed),
+        engine=engine, bank_gossip=bank, faults=faults,
+    )
+
+
+def run_fault_suite(
+    n: int = 8, iterations: int = 10, seed: int = 0,
+    engines=("ticks", "events"), record: dict = None,
+):
+    """Adversarial fault layer (``repro.net.faults``) measurements.
+
+    Two claims per engine, machine-checked into ``BENCH_gossip_sync.json``
+    under ``attack_suite``:
+
+    * EQUIVALENCE (the CI tripwire): an all-HONEST ``FaultConfig`` — the
+      fault layer armed but every node behaving — is bitwise the
+      ``faults=None`` run end to end (accuracy curve, timing, union
+      ledger): the role draws live on a salted side stream and the
+      injection points compile away;
+    * SPOOF DEFENSE (the CI tripwire): under active payload spoofers with
+      digest verification on, the transport-level attack-success rate —
+      corrupted chunks visible through any gated view — is ZERO while
+      rejections accrue and the spoofers' links are quarantined.
+    """
+    rows = []
+    spoof_roles = tuple(
+        ROLE_SPOOF if i in (1, 2, 3) else ROLE_HONEST for i in range(n)
+    )
+    for engine in engines:
+        base = _run_faulted(n, iterations, seed, engine, None)
+        hon = _run_faulted(
+            n, iterations, seed, engine, FaultConfig(roles=(ROLE_HONEST,) * n)
+        )
+        equivalent = _results_bitwise_equal(base, hon)
+        emit(
+            f"gossip/fault_suite/equivalence/{engine}", float(equivalent),
+            f"bitwise_equal_unfaulted={equivalent}",
+        )
+        rows.append(dict(
+            kind="equivalence", engine=engine, n=n, iterations=iterations,
+            bitwise_equal_unfaulted=bool(equivalent),
+        ))
+        adv = _run_faulted(
+            n, iterations, seed, engine,
+            FaultConfig(roles=spoof_roles, spoof_rate=1.0,
+                        verify_digests=True, quarantine_after=3),
+            bank=BankGossipConfig(chunks_per_slot=4),
+        )
+        rep = adv.extras["fault_report"]
+        asr = int(np.asarray(rep["tainted_in_views"]).sum())
+        emit(
+            f"gossip/fault_suite/spoof_defense/{engine}", float(asr),
+            f"attack_success={asr};rejected={rep['rejected_total']};"
+            f"quarantined={rep['quarantined_links']};"
+            f"final_acc={adv.accs[-1]:.3f}",
+        )
+        rows.append(dict(
+            kind="spoof_defense", engine=engine, n=n, iterations=iterations,
+            spoofers=sum(r == ROLE_SPOOF for r in spoof_roles),
+            attack_success=asr, rejected=int(rep["rejected_total"]),
+            quarantined_links=int(rep["quarantined_links"]),
+            final_acc=float(adv.accs[-1]),
+        ))
+    if record is not None:
+        record["attack_suite"] = rows
+    return rows
+
+
 def write_bench_json(record: dict, path: str = JSON_PATH) -> None:
     record = dict(record, schema="gossip_sync_bench_v1", backend=jax.default_backend())
     with open(path, "w") as f:
@@ -544,8 +628,8 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     """Everything BENCH_gossip_sync.json carries: the fast-path grid, the
     sharded round, dispatch batching, the bank-gossip equivalence +
     bandwidth sweep, the event-engine equivalence + continuous-time rows,
-    and the observability equivalence + overhead rows (no accuracy
-    sweeps)."""
+    the observability equivalence + overhead rows, and the attack-suite
+    equivalence + spoof-defense rows (no accuracy sweeps)."""
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
@@ -554,6 +638,7 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     run_bank_gossip(record=record)
     run_event_engine(record=record)
     run_observability(record=record)
+    run_fault_suite(record=record)
     if own:
         write_bench_json(record, json_path)
     return record
@@ -639,8 +724,11 @@ def smoke(json_path: str = JSON_PATH) -> int:
     bank-gossip run at unlimited capacity that is no longer bitwise the
     bankless PR-3 path, an event-engine run in the degenerate
     uniform-delay limit that is no longer bitwise the tick path, an
-    obs-instrumented run that is no longer bitwise the obs-off path, or a
-    warmed obs-on run costing more than 10% extra wall time.
+    obs-instrumented run that is no longer bitwise the obs-off path, a
+    warmed obs-on run costing more than 10% extra wall time, an
+    all-honest fault config that is no longer bitwise the un-faulted
+    path, or a spoofed chunk that survives digest verification into a
+    gated view (attack_success != 0 / zero rejections).
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -656,6 +744,9 @@ def smoke(json_path: str = JSON_PATH) -> int:
         record=record,
     )
     obs_rows = run_observability(n=6, iterations=10, record=record)
+    fault_rows = run_fault_suite(
+        n=6, iterations=8, engines=("ticks",), record=record,
+    )
     write_bench_json(record, json_path)
     ok = True
     for row in rows:
@@ -698,6 +789,23 @@ def smoke(json_path: str = JSON_PATH) -> int:
             ok = False
     if not obs_rows:
         print("# SMOKE FAIL: no observability rows recorded")
+        ok = False
+    for row in fault_rows:
+        if row["kind"] == "equivalence" and not row["bitwise_equal_unfaulted"]:
+            print(f"# SMOKE FAIL: all-honest fault config diverged from the "
+                  f"un-faulted path: {row}")
+            ok = False
+        if row["kind"] == "spoof_defense":
+            if row["attack_success"] != 0:
+                print(f"# SMOKE FAIL: spoofed chunk survived digest "
+                      f"verification into a gated view: {row}")
+                ok = False
+            if row["rejected"] == 0:
+                print(f"# SMOKE FAIL: spoof run recorded no rejections — "
+                      f"the defense never engaged: {row}")
+                ok = False
+    if not any(r["kind"] == "spoof_defense" for r in fault_rows):
+        print("# SMOKE FAIL: no spoof-defense rows recorded")
         ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1

@@ -75,6 +75,11 @@ def main() -> None:
         # overhead. Already part of gossip_sync; same targeted-run rule.
         *([("observability", lambda: gossip_propagation.run_observability())]
           if args.only else []),
+        # adversarial fault layer: all-honest bitwise equivalence + the
+        # spoof-defense tripwire (BENCH_gossip_sync.json "attack_suite").
+        # Already part of gossip_sync; same targeted-run rule.
+        *([("attack_suite", lambda: gossip_propagation.run_fault_suite())]
+          if args.only else []),
         # demo: write a Perfetto trace + metrics JSONL from a small sim
         *([("obs_report", lambda: subprocess.check_call(
             [sys.executable, "scripts/obs_report.py", "--iterations", "10"]))]
@@ -83,7 +88,10 @@ def main() -> None:
             gossip_propagation.run_sweep(iters_mid),
             gossip_propagation.run_partition(iters_mid),
         )),
-        ("table3", lambda: table3_attack_success.run(iters_mid)),
+        ("table3", lambda: (
+            table3_attack_success.run(iters_mid),
+            table3_attack_success.run_transport(iters_mid // 4),
+        )),
         ("table4", lambda: table4_contribution_rates.run("cnn", iters_mid, counts=counts)),
         ("ablation", lambda: ablation_weighted.run(150 if args.quick else 200)),
         ("roofline", lambda: roofline_table.run()),

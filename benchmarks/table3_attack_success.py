@@ -3,9 +3,24 @@
 Paper: DAG-FL 0.006/0.356/0.624 at 5/10/20 backdoor nodes; Block 0.619,
 Google 0.917, Async 0.921 at 20. Validated ordering at bench scale:
 DAG-FL(5) << DAG-FL(20) ~= Block(20) << Google/Async(20).
+
+``run_transport`` extends the table with TRANSPORT-level adversaries
+(``repro.net.faults``): payload spoofers against digest verification and
+sybil approval inflation — the attack-success observable there is
+corrupted chunks reaching a gated view (must be 0 with the defense on)
+rather than backdoor-label accuracy. The machine-readable copy of the
+transport rows lives in ``BENCH_gossip_sync.json`` under ``attack_suite``
+(``benchmarks.gossip_propagation.run_fault_suite``).
 """
+import numpy as np
+
 from benchmarks.common import emit, timed
-from repro.fl.experiments import abnormal_experiment
+from repro.fl.experiments import abnormal_experiment, default_dagfl_config, make_cnn_setup
+from repro.fl.systems import SimConfig, run_dagfl_gossip
+from repro.net import gossip as gossip_lib
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.faults import ROLE_HONEST, ROLE_SPOOF, ROLE_SYBIL, FaultConfig
 
 
 def run(iterations: int = 300, seed: int = 0):
@@ -28,4 +43,55 @@ def run(iterations: int = 300, seed: int = 0):
         rows[(sysname, 20)] = asr
         emit(f"table3/{sysname}/backdoor20", (t["s"] / iterations) * 1e6,
              f"attack_success={asr:.4f}")
+    return rows
+
+
+def run_transport(iterations: int = 30, seed: int = 0, n: int = 12):
+    """Transport-level attack rows: spoofers (with/without the digest
+    defense) and sybil approval inflation on the DAG-FL gossip system."""
+    rows = {}
+
+    def _run(faults, bank=None):
+        dcfg = default_dagfl_config(num_nodes=n)
+        sim = SimConfig(iterations=iterations,
+                        eval_every=max(iterations // 3, 1), seed=seed)
+        task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=seed)
+        return run_dagfl_gossip(
+            task, nodes, dcfg, sim, gval,
+            topology=topo.full(n, link_latency=1.0, seed=seed),
+            gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed),
+            bank_gossip=bank, faults=faults,
+        )
+
+    spoof_roles = tuple(
+        ROLE_SPOOF if i < 3 else ROLE_HONEST for i in range(n)
+    )
+    bank = BankGossipConfig(chunks_per_slot=4)
+    for tag, verify in (("defended", True), ("undefended", False)):
+        with timed() as t:
+            res = _run(
+                FaultConfig(roles=spoof_roles, spoof_rate=1.0,
+                            verify_digests=verify, quarantine_after=3),
+                bank=bank,
+            )
+        rep = res.extras["fault_report"]
+        asr = int(np.asarray(rep["tainted_in_views"]).sum())
+        rows[("spoof", tag)] = asr
+        emit(f"table3/transport/spoof_{tag}", (t["s"] / iterations) * 1e6,
+             f"attack_success={asr};rejected={rep['rejected_total']};"
+             f"quarantined={rep['quarantined_links']};"
+             f"final_acc={res.accs[-1]:.3f}")
+
+    sybil_roles = tuple(
+        ROLE_SYBIL if i < 3 else ROLE_HONEST for i in range(n)
+    )
+    with timed() as t:
+        res = _run(FaultConfig(roles=sybil_roles))
+    dag = res.extras["dag"]
+    own = np.asarray(dag.publisher)
+    forged = int(np.asarray(dag.approval_count)[np.isin(own, [0, 1, 2])].sum())
+    rows[("sybil", "inflation")] = forged
+    emit(f"table3/transport/sybil_inflation", (t["s"] / iterations) * 1e6,
+         f"approvals_on_sybil_rows={forged};"
+         f"approvals_in_union={res.extras['approvals_in_union']}")
     return rows

@@ -57,7 +57,7 @@ def main():
     dup = res.extras["approvals_issued"] - res.extras["approvals_in_union"]
     print(f"\nfinal acc {res.accs[-1]:.3f} (baseline {base.accs[-1]:.3f}); "
           f"sync rounds {res.extras['sync_rounds']}; "
-          f"duplicate approvals collapsed by union-max: {dup}")
+          f"approval credits lost to ring eviction: {dup}")
 
     # --- heal to fixpoint: all replicas become the identical DagState -----
     rs = res.extras["replicas"]

@@ -47,6 +47,29 @@ def credit_scores(dag: DagState, m: int = 0, floor: float = 0.05) -> jnp.ndarray
     return jnp.clip(rates / mean, floor, 1.0)
 
 
+def rejection_credit(
+    rejects: jnp.ndarray, floor: float = 0.05, scale: float = 1.0
+) -> jnp.ndarray:
+    """Per-sender trust from digest-rejection counts (the transport-layer
+    complement of ``credit_scores``).
+
+    ``rejects`` is the (N, N) matrix the fault-injected bank service
+    accumulates (``repro.net.faults.FaultState.rejects`` — receiver i
+    charged sender j one count per chunk that failed digest verification).
+    A sender's credit decays exponentially in its TOTAL rejections across
+    all receivers, clipped to ``[floor, 1]``: a clean node keeps exactly
+    1.0 (zero rejections — the honest path is unperturbed), a spoofer
+    collapses to the floor within a few rejected chunks. Feed the log of
+    this into tip-selection bias (``credit_weighted_tip_scores`` composes
+    the same way) to quarantine spoofers from approval, not just from
+    transport.
+    """
+    per_sender = jnp.sum(
+        jnp.asarray(rejects, jnp.int32), axis=0
+    ).astype(jnp.float32)
+    return jnp.clip(jnp.exp(-scale * per_sender), floor, 1.0)
+
+
 def credit_weighted_tip_scores(
     dag: DagState, tip_scores: jnp.ndarray, credits: jnp.ndarray
 ) -> jnp.ndarray:

@@ -24,7 +24,9 @@ class DagState(NamedTuple):
     publisher: jnp.ndarray          # (cap,) int32  node id, -1 = empty
     publish_time: jnp.ndarray       # (cap,) f32
     approvals: jnp.ndarray          # (cap, k) int32 indices approved by row
-    approval_count: jnp.ndarray     # (cap,) int32  times row was approved
+    approvers: jnp.ndarray          # (cap, N) bool  node n approved row r
+    approval_count: jnp.ndarray     # (cap,) int32  distinct approver nodes
+                                    # (= popcount of the approvers row)
     accuracy: jnp.ndarray           # (cap,) f32    validation accuracy at publish
     auth_tag: jnp.ndarray           # (cap,) f32    integrity checksum of payload
     model_slot: jnp.ndarray         # (cap,) int32  index into the model bank
@@ -40,6 +42,7 @@ def empty_dag(capacity: int, k: int, num_nodes: int) -> DagState:
         publisher=jnp.full((capacity,), NO_TX, jnp.int32),
         publish_time=jnp.zeros((capacity,), jnp.float32),
         approvals=jnp.full((capacity, k), NO_TX, jnp.int32),
+        approvers=jnp.zeros((capacity, num_nodes), jnp.bool_),
         approval_count=jnp.zeros((capacity,), jnp.int32),
         accuracy=jnp.zeros((capacity,), jnp.float32),
         auth_tag=jnp.zeros((capacity,), jnp.float32),
@@ -73,30 +76,38 @@ def publish_at(
     number instead, so the same transaction lands in the same slot on every
     replica and ``merge`` can reconcile row-wise by identity.
     """
-    # credit each approved transaction; track threshold crossings
+    # Credit each approved transaction by marking this publisher in its
+    # approver set; approval_count is the set's popcount, so re-approving a
+    # row the node already credited (directly or via a replayed stale view)
+    # cannot inflate the count. Threshold crossings gate on *newly set* bits.
+    pub_i = publisher.astype(jnp.int32)
+
     def credit(carry, tx):
-        ac, c0, c1 = carry
+        appr, c0, c1 = carry
         ok = tx >= 0
         idx = jnp.maximum(tx, 0)
-        old = ac[idx]
-        ac = ac.at[idx].add(jnp.where(ok, 1, 0))
+        old = jnp.sum(appr[idx].astype(jnp.int32))
+        newly = ok & ~appr[idx, pub_i]
+        appr = appr.at[idx, pub_i].set(appr[idx, pub_i] | ok)
         pub = dag.publisher[idx]
-        crossed0 = ok & (old == 0) & (pub >= 0)
-        crossed1 = ok & (old == 1) & (pub >= 0)
+        crossed0 = newly & (old == 0) & (pub >= 0)
+        crossed1 = newly & (old == 1) & (pub >= 0)
         safe_pub = jnp.maximum(pub, 0)
         c0 = c0.at[safe_pub].add(jnp.where(crossed0, 1, 0))
         c1 = c1.at[safe_pub].add(jnp.where(crossed1, 1, 0))
-        return (ac, c0, c1), None
+        return (appr, c0, c1), None
 
-    (ac, c0, c1), _ = jax.lax.scan(
-        credit, (dag.approval_count, dag.contributing_m0, dag.contributing_m1), approvals
+    (appr, c0, c1), _ = jax.lax.scan(
+        credit, (dag.approvers, dag.contributing_m0, dag.contributing_m1), approvals
     )
+    appr = appr.at[row].set(False)      # ring reuse: a fresh row is unapproved
 
     return DagState(
         publisher=dag.publisher.at[row].set(publisher.astype(jnp.int32)),
         publish_time=dag.publish_time.at[row].set(time.astype(jnp.float32)),
         approvals=dag.approvals.at[row].set(approvals.astype(jnp.int32)),
-        approval_count=ac.at[row].set(0),
+        approvers=appr,
+        approval_count=jnp.sum(appr.astype(jnp.int32), axis=1),
         accuracy=dag.accuracy.at[row].set(accuracy.astype(jnp.float32)),
         auth_tag=dag.auth_tag.at[row].set(auth_tag.astype(jnp.float32)),
         model_slot=dag.model_slot.at[row].set(model_slot.astype(jnp.int32)),
@@ -178,8 +189,10 @@ class MergeViews(NamedTuple):
 
     ``keys``        the (publish_time, publisher) row identity the winner
                     rule reduces over;
-    ``counter``     approval_count — monotone per-identity (union-by-max
-                    across candidates holding the winning identity);
+    ``approvers``   per-row approver-node bitsets — merged as the exact set
+                    UNION (bitwise OR) across candidates holding the winning
+                    identity; ``approval_count`` is rederived as the union's
+                    popcount, never taken from any single candidate;
     ``payload``     row-addressed leaves that follow the winning identity
                     wholesale (keys included: the winner's bits survive);
     ``watermarks``  monotone ledger-wide counters merged by element-wise max.
@@ -191,7 +204,7 @@ class MergeViews(NamedTuple):
     """
 
     keys: Tuple[jnp.ndarray, jnp.ndarray]       # (publish_time, publisher)
-    counter: jnp.ndarray                        # approval_count
+    approvers: jnp.ndarray                      # (cap, N) bool
     payload: Tuple[Tuple[str, jnp.ndarray], ...]
     watermarks: Tuple[Tuple[str, jnp.ndarray], ...]
 
@@ -199,7 +212,7 @@ class MergeViews(NamedTuple):
 def merge_views(dag: DagState) -> MergeViews:
     return MergeViews(
         keys=(dag.publish_time, dag.publisher),
-        counter=dag.approval_count,
+        approvers=dag.approvers,
         payload=(
             ("publisher", dag.publisher),
             ("publish_time", dag.publish_time),
@@ -228,7 +241,7 @@ def row_winner(
     ``(publish_time, publisher)`` key (ring semantics make the later
     transaction the overwriting one; publisher id breaks exact time ties, so
     the rule is deterministic, commutative, and associative); the same
-    transaction on both sides is ``same_tx`` (counters union-by-max).
+    transaction on both sides is ``same_tx`` (approver sets union).
     """
     l_time, l_pub = local_keys
     r_time, r_pub = remote_keys
@@ -249,12 +262,12 @@ def merge(local: DagState, remote: DagState) -> DagState:
 
     * payload leaves follow the winning ``(publish_time, publisher)``
       identity wholesale;
-    * the *same* transaction on both sides keeps the element-wise MAXIMUM
-      approval count: each replica may have credited a disjoint subset of
-      approvers, and max is the monotone (CRDT-style) bound that never
-      un-approves. Concurrent approvals of one row on two replicas therefore
-      collapse (union-by-max, not sum) — ``repro.net`` exposes this as the
-      measurable duplicate-approval deficit of a gossiped deployment;
+    * the *same* transaction on both sides keeps the UNION of the two
+      approver bitsets (a grow-only set CRDT that never un-approves) and
+      rederives ``approval_count`` as the union's popcount. Each replica may
+      have credited a disjoint subset of approvers; the exact union counts
+      every distinct approver once — duplicate approvals across stale (or
+      adversarially replayed) views no longer collapse to a single max;
     * ``count`` and the per-node contribution counters are monotone
       watermarks and merge by element-wise max, so they never decrease.
 
@@ -270,21 +283,22 @@ def merge(local: DagState, remote: DagState) -> DagState:
         sel = take_remote.reshape(take_remote.shape + (1,) * (a.ndim - 1))
         return jnp.where(sel, b, a)
 
-    approval_count = jnp.where(take_remote, rv.counter, lv.counter)
-    approval_count = jnp.where(
-        same_tx, jnp.maximum(lv.counter, rv.counter), approval_count
-    )
+    approvers = jnp.where(take_remote[:, None], rv.approvers, lv.approvers)
+    approvers = jnp.where(same_tx[:, None], lv.approvers | rv.approvers, approvers)
     fields = {name: pick(a, remote_payload[name]) for name, a in lv.payload}
     fields.update(
         {name: jnp.maximum(a, dict(rv.watermarks)[name]) for name, a in lv.watermarks}
     )
-    return DagState(approval_count=approval_count, **fields)
+    return DagState(
+        approvers=approvers,
+        approval_count=jnp.sum(approvers.astype(jnp.int32), axis=1),
+        **fields,
+    )
 
 
 def merge_select(
     dags: DagState,
     src: jnp.ndarray,             # (Rr, cap) i32 winner indices per row
-    approval_count: jnp.ndarray,  # (Rr, cap) i32 merged counters per row
     mask: jnp.ndarray = None,     # (Rr, R) bool dense candidate mask
     nbr_idx: jnp.ndarray = None,  # (Rr, D) i32 candidate lists (sparse form)
     nbr_act: jnp.ndarray = None,  # (Rr, D) bool candidate activity
@@ -293,14 +307,17 @@ def merge_select(
 
     The counterpart of the fused winner reduction
     (``repro.kernels.gossip_merge`` / ``repro.kernels.ref``): payload leaves
-    gather the winning sender's row (``out[i, r] = leaf[src[i, r], r]``),
-    the counter comes from the reduction's union-by-max, and watermark
-    leaves max-reduce over the candidate senders — given either as a dense
-    (Rr, R) ``mask`` (the Pallas/TPU form) or as per-receiver
+    gather the winning sender's row (``out[i, r] = leaf[src[i, r], r]``) and
+    watermark leaves max-reduce over the candidate senders — given either as
+    a dense (Rr, R) ``mask`` (the Pallas/TPU form) or as per-receiver
     ``(nbr_idx, nbr_act)`` candidate lists (the degree-compressed form; the
-    receiver itself must be an active candidate). ``dags`` is a stacked
-    replica set — every leaf carries a leading (R, ...) axis (see
-    ``repro.net.replica``).
+    receiver itself must be an active candidate). Approver bitsets take the
+    exact OR-union over every candidate holding the winning row identity and
+    ``approval_count`` is the union's popcount — NOT the winner reduction's
+    union-by-max counter, which undercounts when replicas credited disjoint
+    approvers (the kernels' ``ac`` output is now only an array-level
+    reduction invariant, unused here). ``dags`` is a stacked replica set —
+    every leaf carries a leading (R, ...) axis (see ``repro.net.replica``).
     """
     views = merge_views(dags)
 
@@ -321,4 +338,38 @@ def merge_select(
 
     fields = {name: gather(x) for name, x in views.payload}
     fields.update({name: watermark(w) for name, w in views.watermarks})
-    return DagState(approval_count=approval_count, **fields)
+
+    # Exact approver union: a candidate contributes its bitset for row r iff
+    # it is active and holds the winning (publish_time, publisher) identity.
+    # The 0/1 float einsum contracts over candidates without materializing
+    # the (Rr, R, cap, N) broadcast; sums are exact in f32 (N << 2**24).
+    w_time, w_pub = fields["publish_time"], fields["publisher"]
+    t_all, p_all = views.keys
+    if mask is not None:
+        same = (
+            mask[:, :, None]
+            & (p_all[None] == w_pub[:, None])
+            & (t_all[None] == w_time[:, None])
+            & (w_pub[:, None] >= 0)
+        )
+        union = jnp.einsum(
+            "ijr,jrn->irn", same.astype(jnp.float32),
+            views.approvers.astype(jnp.float32),
+        ) > 0
+    else:
+        same = (
+            nbr_act[:, :, None]
+            & (p_all[nbr_idx] == w_pub[:, None])
+            & (t_all[nbr_idx] == w_time[:, None])
+            & (w_pub[:, None] >= 0)
+        )
+        union = jnp.einsum(
+            "ijr,ijrn->irn", same.astype(jnp.float32),
+            views.approvers[nbr_idx].astype(jnp.float32),
+        ) > 0
+
+    return DagState(
+        approvers=union,
+        approval_count=jnp.sum(union.astype(jnp.int32), axis=-1),
+        **fields,
+    )

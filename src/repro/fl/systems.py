@@ -263,6 +263,13 @@ def _run_dagfl_events(task, nodes, dcfg, sim, global_val, weighted, make_backend
             on_start(node.node_id, t0, t1)
         fn = prep_lazy if lazy else prep_normal
         bias = bd_bias if node.behavior == "backdoor" else zero_bias
+        # defense hook: backends carrying fault state fold their rejection
+        # credit into tip selection — log(1.0) = 0 for clean senders, so
+        # without rejections this adds an exact zero and the trajectory is
+        # untouched
+        fb = getattr(backend, "fault_bias", lambda: None)()
+        if fb is not None:
+            bias = bias + fb
         prepared = fn(
             backend.view(node.node_id),
             backend.bank,
@@ -335,10 +342,10 @@ class _GossipLedger:
     name = "dagfl_gossip"
 
     def __init__(self, state, topology, gossip, partition, mesh=None,
-                 bank_gossip=None, obs=None):
+                 bank_gossip=None, obs=None, faults=None):
         self.net = gossip_lib.GossipNetwork(
             state.dag, state.bank, topology, gossip, partition, mesh=mesh,
-            bank_cfg=bank_gossip, obs_cfg=obs,
+            bank_cfg=bank_gossip, obs_cfg=obs, faults_cfg=faults,
         )
         self.capacity = int(state.dag.publisher.shape[0])
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
@@ -367,6 +374,15 @@ class _GossipLedger:
 
     def commit(self, node_id, t1, prepared):
         dag_i = self.net.read(node_id)
+        # distinct-approval accounting: a credit is "issued" only when this
+        # node was not already an approver of the row in its own replica —
+        # the same predicate publish_at's crossing scan applies, so in the
+        # ideal-wire limit issued == what survives the union exactly
+        rows = np.asarray(prepared.chosen_rows)
+        appr = np.asarray(dag_i.approvers)
+        self.approvals_issued += int(
+            sum(1 for r in rows if r >= 0 and not appr[r, node_id])
+        )
         dag_i, bank = self._commit(
             dag_i, self.net.bank, node_id, jnp.float32(t1), prepared,
             jnp.int32(self.seq),
@@ -379,10 +395,26 @@ class _GossipLedger:
         self.net.trace_host(t1, obs_trace.KIND_COMMIT, node_id, node_id,
                             float(self.seq))
         self.seq += 1
-        self.approvals_issued += int(np.sum(np.asarray(prepared.chosen_rows) >= 0))
 
     def union_dag(self):
         return self.net.union()
+
+    def fault_bias(self):
+        """(N+1,) log-credit tip-selection bias from digest rejections.
+
+        ``anomaly.rejection_credit`` over the fault layer's cumulative
+        rejection matrix: a clean sender's credit is exactly 1.0 (zero
+        bias — the honest trajectory is unperturbed), a quarantined
+        spoofer's collapses toward the floor, down-weighting its tips in
+        Algorithm-2 selection the same way the §VI.B credit extension
+        does. The trailing slot covers publisher -1 (genesis). ``None``
+        without a fault-state carry."""
+        credit = self.net.rejection_credit()
+        if credit is None:
+            return None
+        return jnp.log(jnp.concatenate([
+            jnp.asarray(credit, jnp.float32), jnp.ones((1,), jnp.float32)
+        ]))
 
     def observe(self, done, t1, union):
         self.divergence.append(
@@ -405,6 +437,9 @@ class _GossipLedger:
         if self.net.obs_cfg is not None:
             # drained telemetry: metric series, trace, dispatch breakdown
             out["obs"] = self.net.obs_report()
+        if self.net.faults_cfg is not None:
+            # adversary post-mortem: roles, rejections, quarantine, ASR
+            out["fault_report"] = self.net.fault_report()
         return out | {
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
@@ -413,9 +448,9 @@ class _GossipLedger:
             "events_processed": self.net.events_processed,
             "synced_final": self.net.synced(),
             "missing_rows_final": self.net.missing_rows(union),
-            # duplicate-approval deficit: credits issued by committers vs
-            # what survives the union's max-merge (a lower bound after ring
-            # eviction)
+            # approval deficit: distinct credits issued by committers vs
+            # what survives the union — with the exact approver-set merge
+            # the only loss channel left is ring eviction
             "approvals_issued": self.approvals_issued,
             "approvals_in_union": int(
                 np.asarray(jnp.sum(union.approval_count * (union.publisher >= 0)))
@@ -438,6 +473,7 @@ def run_dagfl_gossip(
     bank_gossip: Optional[BankGossipConfig] = None,
     engine: Optional[str] = None,
     obs: Optional[ObsConfig] = None,
+    faults=None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -478,6 +514,14 @@ def run_dagfl_gossip(
     Chrome-trace / JSONL export via ``repro.obs.export``). Collection
     never perturbs the trajectory: the obs-on run is bitwise the obs-off
     run (CI-enforced).
+
+    ``faults`` (``repro.net.faults.FaultConfig``) injects Byzantine roles
+    into the sync transport — crash/churn windows, eclipse adjacency
+    rewrites, selective forwarding, payload spoofing, sybil approval
+    inflation — with digest verification + quarantine as the defense.
+    ``faults=None`` (and an all-honest config) leaves every path bitwise
+    what it was; adversarial runs surface ``extras["fault_report"]`` and
+    fold rejection credit into tip selection (``fault_bias``).
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
@@ -489,7 +533,7 @@ def run_dagfl_gossip(
         task, nodes, dcfg, sim, global_val, weighted,
         lambda state, commit_fn: _GossipLedger(
             state, topology, gossip, partition, mesh=mesh,
-            bank_gossip=bank_gossip, obs=obs,
+            bank_gossip=bank_gossip, obs=obs, faults=faults,
         ),
     )
 

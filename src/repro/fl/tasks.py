@@ -194,8 +194,14 @@ def make_epoch_train(task):
 
 
 def bench_cnn_task() -> CNNTask:
-    """Scaled-down CNN for CPU benches (EXPERIMENTS.md notes the scaling)."""
-    return CNNTask(image_size=16, channels=(8, 16), fc_units=64, learning_rate=0.2)
+    """Scaled-down CNN for CPU benches (EXPERIMENTS.md notes the scaling).
+
+    lr 0.05 instead of the full-size task's 0.002: the scaled model needs a
+    hotter step, but 0.2 diverges on the class-skewed paper partition (each
+    node's epoch yanks the model toward its dominant class and accuracy
+    oscillates at chance), which is what kept test_system xfailed.
+    """
+    return CNNTask(image_size=16, channels=(8, 16), fc_units=64, learning_rate=0.05)
 
 
 def bench_lstm_task() -> LSTMTask:

@@ -123,6 +123,7 @@ def transfer_select(
     src_have: jnp.ndarray,     # (R, M) bool — sender effective availability
     edge_active: jnp.ndarray,  # (Rb, R) bool — receiver i hears sender j
     afford: jnp.ndarray,       # (Rb, R) i32 — whole chunks per link this tick
+    return_links: bool = False,
 ):
     """One tick of bandwidth-limited chunk transfers (pure lax, no PRNG).
 
@@ -140,7 +141,12 @@ def transfer_select(
     the sharded tick is bitwise the single-device one.
 
     Returns ``(take (Rb, M) bool, spent (Rb, R) i32 chunks moved per link,
-    pending (Rb, R) bool — link had assigned work left over)``.
+    pending (Rb, R) bool — link had assigned work left over)``. With
+    ``return_links=True`` the per-link admission mask is exposed too:
+    ``(take, take_link (Rb, R, M) bool, spent, pending)`` — the fault layer
+    (``repro.net.faults``) needs sender attribution to verify digests and
+    charge rejections per link; striping guarantees at most one sender per
+    (receiver, chunk), so ``take == any(take_link, axis=1)`` loses nothing.
     """
     rb, m = need.shape
     r = src_have.shape[0]
@@ -160,4 +166,31 @@ def transfer_select(
     take = jnp.any(take_link, axis=1)
     spent = jnp.sum(take_link.astype(jnp.int32), axis=2)
     pending = jnp.any(assigned & ~take_link, axis=2)
+    if return_links:
+        return take, take_link, spent, pending
     return take, spent, pending
+
+
+def transfer_verify(
+    take_link: jnp.ndarray,    # (Rb, R, M) bool — admitted transfers per link
+    bad_link: jnp.ndarray,     # (Rb, R, M) bool — payload corrupted in flight
+):
+    """Digest check on receive: the defense-side reduction next to dedup.
+
+    A receiver recomputes the content digest of every chunk it just pulled
+    and compares against the digest table it already gossips
+    (``repro.net.bank.chunk_digests``); a mismatch means the sender served
+    bytes that do not hash to the announced content, so the chunk is
+    dropped before it can satisfy ``need`` — it never reaches
+    ``commit_chunks``/``gate_view``. Array form: ``bad_link`` marks the
+    admitted transfers whose payload would fail that recomputation (spoofed
+    in flight, or re-served from a tainted store).
+
+    Returns ``(ok_take (Rb, M) bool — chunks that verified and may be
+    committed, rejects (Rb, R) i32 — rejected chunk count charged to each
+    (receiver, sender) link)``. With ``bad_link`` all-False this is bitwise
+    ``(any(take_link, axis=1), zeros)`` — the honest path is unchanged.
+    """
+    rej = take_link & bad_link
+    ok_take = jnp.any(take_link & ~bad_link, axis=1)
+    return ok_take, jnp.sum(rej.astype(jnp.int32), axis=2)

@@ -50,24 +50,39 @@ supplies the missing network layer:
                 usable only once its model chunks arrived. Off by default;
                 with unlimited capacity it is bitwise the bankless path.
 
+  ``faults``    adversarial fault injection: per-node Byzantine roles
+                (crash windows, eclipse adjacency rewrites, probabilistic
+                selective forwarding, in-flight chunk spoofing, sybil
+                approval forging) applied *inside* the jitted round bodies
+                of both engines, salted off the round key so
+                ``faults_cfg=None`` — and an all-honest config — is
+                bitwise the un-faulted run. Defense: digest verification
+                on receive, alternate-holder re-fetch, link quarantine,
+                and ``repro.core.anomaly.rejection_credit`` feedback.
+
 Data flow: ``topology`` builds the overlay → ``replica`` stacks the
 per-node ledgers → ``gossip`` moves rows between them → ``repro.fl.systems.
 run_dagfl_gossip`` interleaves sync ticks with Algorithm-2 prepare/commit
-events so tip staleness, duplicate approvals across stale views, and
-partition/heal convergence become measurable against the shared-ledger
-baseline.
+events so tip staleness, exact approver-set convergence across stale
+views, and partition/heal recovery become measurable against the
+shared-ledger baseline. ``faults`` injects Byzantine roles (crash /
+eclipse / selective-forward / spoof / sybil) inside both engines' jitted
+loops, with digest verification + quarantine as the defense
+(docs/THREAT_MODEL.md).
 """
-from repro.net import bank, events, gossip, mesh, replica, topology
+from repro.net import bank, events, faults, gossip, mesh, replica, topology
 from repro.net.bank import BankGossipConfig, BankState
 from repro.net.events import EventQueue, simulate_insystem_tips
+from repro.net.faults import FaultConfig, FaultState
 from repro.net.gossip import GossipConfig, GossipNetwork, PartitionSchedule
 from repro.net.mesh import make_gossip_mesh
 from repro.net.replica import ReplicaSet
 from repro.net.topology import Topology
 
 __all__ = [
-    "bank", "events", "gossip", "mesh", "replica", "topology",
+    "bank", "events", "faults", "gossip", "mesh", "replica", "topology",
     "BankGossipConfig", "BankState", "EventQueue",
+    "FaultConfig", "FaultState",
     "GossipConfig", "GossipNetwork", "PartitionSchedule",
     "ReplicaSet", "Topology", "make_gossip_mesh",
     "simulate_insystem_tips",

@@ -236,7 +236,7 @@ def _deliver_round(dags, qt, fires, key, t, qv, qkind, qsrc, qdst, islot,
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_jit(impl: str, obs=None):
+def _advance_events_jit(impl: str, obs=None, faults=None):
     """Event-driven ``advance``: one ``lax.while_loop`` over delivery batches.
 
     Each iteration pops the queue head (``repro.kernels.event_pop``),
@@ -251,7 +251,13 @@ def _advance_events_jit(impl: str, obs=None):
     through the loop carry, sampled once per event batch at the batch
     instant — a pure read, so the dags/key trajectory is bitwise the
     ``obs=None`` program, whose body below is the untouched code.
+    ``faults`` (a ``repro.net.faults.FaultConfig``) swaps in the
+    fault-injected body — ``faults=None`` keeps the untouched program
+    below.
     """
+    if faults is not None:
+        from repro.net import faults as faults_lib   # deferred: faults imports this module
+        return faults_lib._advance_events_faults_jit(impl, faults, obs)
 
     if obs is None:
         def advance(dags, qtime, qvalid, qkind, qsrc, qdst, qseq, islot, key,
@@ -318,7 +324,7 @@ def _advance_events_jit(impl: str, obs=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_bank_jit(impl: str, bank_impl, obs=None):
+def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None):
     """Event-driven ``advance`` with the model bank gossiped.
 
     The row half of a batch is the shared ``_deliver_round`` (fire caps and
@@ -333,8 +339,15 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None):
     the rolled-over credit. ``obs`` threads the telemetry carry exactly as
     in ``_advance_events_jit`` (``obs=None`` keeps the untouched program);
     bank batches additionally sample chunk lag / byte totals and record a
-    DRAIN trace span per link that moved payload.
+    DRAIN trace span per link that moved payload. ``faults`` swaps in the
+    fault-injected body (``faults=None`` keeps the untouched program
+    below).
     """
+    if faults is not None:
+        from repro.net import faults as faults_lib
+        return faults_lib._advance_events_bank_faults_jit(
+            impl, bank_impl, faults, obs
+        )
 
     if obs is not None:
         from repro import obs as obs_lib

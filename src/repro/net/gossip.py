@@ -251,21 +251,21 @@ def _round_fused(
     if impl == "pallas":
         # the receiver is a candidate
         mask = jnp.asarray(edge_active).at[jnp.arange(rb), rows].set(True)
-        src, ac = gossip_kernel.gossip_winner_pallas(
+        src, _ = gossip_kernel.gossip_winner_pallas(
             senders.publish_time, senders.publisher, senders.approval_count,
             mask, interpret=jax.default_backend() != "tpu",
             row_offset=0 if row_offset is None else row_offset,
         )
-        return dag_lib.merge_select(senders, src, ac, mask=mask)
+        return dag_lib.merge_select(senders, src, mask=mask)
     if impl != "lax":
         raise ValueError(f"unknown gossip round impl: {impl!r}")
     act = jnp.take_along_axis(edge_active, nbr_idx, axis=1) | (nbr_idx == rows[:, None])
     act = act & nbr_valid
-    src, ac = gossip_kernel.gossip_winner_nbr(
+    src, _ = gossip_kernel.gossip_winner_nbr(
         senders.publish_time, senders.publisher, senders.approval_count,
         nbr_idx, act, row_ids=None if row_offset is None else rows,
     )
-    return dag_lib.merge_select(senders, src, ac, nbr_idx=nbr_idx, nbr_act=act)
+    return dag_lib.merge_select(senders, src, nbr_idx=nbr_idx, nbr_act=act)
 
 
 def _apply_round(
@@ -437,13 +437,18 @@ def _bank_tick_for(impl: str, bank_impl, mesh):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None):
+def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
     """Tick-batched advance with the bank gossiped: the same ONE-``lax.scan``
     window as ``_advance_jit`` — same PRNG splits, same edge samples — with
     the transport state threaded through the carry. ``obs`` threads the
     telemetry carry too (``obs=None`` keeps the untouched program); the
     bank run additionally samples chunk lag / byte totals and records a
-    DRAIN trace span per link that moved payload."""
+    DRAIN trace span per link that moved payload. ``faults`` (a
+    ``repro.net.faults.FaultConfig``) swaps in the fault-injected body —
+    ``faults=None`` keeps the untouched program below."""
+    if faults is not None:
+        from repro.net import faults as faults_lib   # deferred: faults imports this module
+        return faults_lib._advance_bank_faults_jit(impl, bank_impl, faults, obs)
     tick = _bank_tick_for(impl, bank_impl, mesh)
 
     if obs is None:
@@ -497,14 +502,18 @@ def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None):
+def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
     """Fixpoint flush with the bank gossiped: one ``lax.while_loop`` whose
     predicate also demands every replica's referenced chunks have ARRIVED —
     rows synced is no longer enough when payloads lag — and whose stall
     check watches the transport state too (credit accrual on a pending link
     is progress; a full stride cycle with nothing moving is a fixpoint).
     ``obs`` threads the telemetry carry (``obs=None`` keeps the untouched
-    program)."""
+    program); ``faults`` swaps in the fault-injected body (``faults=None``
+    keeps the untouched program below)."""
+    if faults is not None:
+        from repro.net import faults as faults_lib
+        return faults_lib._converge_bank_faults_jit(impl, bank_impl, faults, obs)
     tick = _bank_tick_for(impl, bank_impl, mesh)
 
     def synced(dags, bstate, digest):
@@ -627,7 +636,7 @@ def make_gossip_round(impl: str = "fused", mesh=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_jit(impl: str, mesh=None, obs=None):
+def _advance_jit(impl: str, mesh=None, obs=None, faults=None):
     """One jitted lax.scan running a whole advance window of sync ticks.
 
     The PRNG key is split inside the scan exactly like the sequential
@@ -641,8 +650,13 @@ def _advance_jit(impl: str, mesh=None, obs=None):
     ``obs`` (an ``repro.obs.ObsConfig``) threads the telemetry collectors
     through the scan carry — a pure read sampled after each round, so the
     dags/key trajectory is bitwise the ``obs=None`` program, whose body
-    below is literally the untouched code.
+    below is literally the untouched code. ``faults`` (a
+    ``repro.net.faults.FaultConfig``) swaps in the fault-injected body —
+    ``faults=None`` keeps the untouched program below.
     """
+    if faults is not None:
+        from repro.net import faults as faults_lib
+        return faults_lib._advance_faults_jit(impl, faults, obs)
     apply_round = _round_for(impl, mesh)
 
     if obs is None:
@@ -689,7 +703,7 @@ def _advance_jit(impl: str, mesh=None, obs=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_jit(impl: str, mesh=None, obs=None):
+def _converge_jit(impl: str, mesh=None, obs=None, faults=None):
     """Device-resident fixpoint flush: ONE jitted lax.while_loop.
 
     The predicate — not yet synced, tick budget left, progress not stalled
@@ -700,7 +714,12 @@ def _converge_jit(impl: str, mesh=None, obs=None):
     ``obs`` threads the telemetry carry exactly as in ``_advance_jit``
     (``obs=None`` keeps the untouched program; a flush has no timeline, so
     its samples sit at the tick arithmetic's ``(tick + 1) * period``).
+    ``faults`` swaps in the fault-injected body (``faults=None`` keeps the
+    untouched program below).
     """
+    if faults is not None:
+        from repro.net import faults as faults_lib
+        return faults_lib._converge_faults_jit(impl, faults, obs)
     apply_round = _round_for(impl, mesh)
 
     if obs is None:
@@ -798,6 +817,7 @@ class GossipNetwork:
         mesh=None,
         bank_cfg: Optional[BankGossipConfig] = None,
         obs_cfg=None,
+        faults_cfg=None,
     ):
         n = top.num_nodes
         self.topology = top
@@ -806,6 +826,17 @@ class GossipNetwork:
         self.mesh = mesh
         self.bank_cfg = bank_cfg
         self.obs_cfg = obs_cfg
+        self.faults_cfg = faults_cfg
+        self._fstate = None
+        if faults_cfg is not None:
+            from repro.net import faults as faults_lib
+            if mesh is not None:
+                raise NotImplementedError(
+                    "fault injection is single-device for now — the role "
+                    "masks and FaultState are not mesh-sharded (see ROADMAP "
+                    "open items)"
+                )
+            faults_lib.validate_faults(faults_cfg, n, bank=bank_cfg is not None)
         # init_replicas validates the mesh and shards the receiver axis
         self.replicas = replica_lib.init_replicas(dag, bank, n, mesh=mesh)
         if bank_cfg is not None:
@@ -842,6 +873,9 @@ class GossipNetwork:
                     for x in (self._digest, self._cap_bytes)
                 )
             self.replicas = self.replicas._replace(bank_state=bstate)
+            if faults_cfg is not None:
+                from repro.net import faults as faults_lib
+                self._fstate = faults_lib.init_fault_state(n, slots, c)
         stride = stride_matrix(top, cfg.sync_period, use_strides=cfg.sync_period > 0)
         self._max_stride = (
             int(stride[top.adjacency].max()) if top.adjacency.any() else 1
@@ -887,6 +921,9 @@ class GossipNetwork:
                 self._metrics = mesh_lib.replicate(self._metrics, mesh)
                 self._ring = mesh_lib.replicate(self._ring, mesh)
         period = cfg.sync_period
+        # wall-clock sample instant per tick — (tick + 1) * period, the
+        # telemetry convention; the fault layer's crash windows use it too
+        self._period = jnp.float32(max(period, 0.0))
         self._next_tick_t = period if period > 0 else 0.0
         if cfg.engine not in ("ticks", "events"):
             raise ValueError(f"unknown gossip engine: {cfg.engine!r}")
@@ -1040,12 +1077,18 @@ class GossipNetwork:
             "rows_delta": np.asarray(m.rows_delta, np.int64)[:taken],
             "chunk_lag": np.asarray(m.chunk_lag, np.int64)[:taken],
             "bytes_total": np.asarray(m.bytes_total, np.float64)[:taken],
+            "staleness_node": np.asarray(m.staleness_node, np.int64)[:taken],
+            "rejected": np.asarray(m.rejected, np.int64)[:taken],
+            "quarantined": np.asarray(m.quarantined, np.int64)[:taken],
         }
         final = {
             "bytes_sent": self.bytes_sent(),
             "chunk_lag": float(self.missing_chunks().max()),
             "staleness": float(self.missing_rows().max()),
         }
+        if self.faults_cfg is not None and self._fstate is not None:
+            final["rejected"] = float(np.asarray(self._fstate.rejects).sum())
+            final["quarantined"] = float(self.quarantined_links().sum())
         return obs_lib.ObsReport(
             num_nodes=self.topology.num_nodes,
             engine=self.cfg.engine,
@@ -1059,6 +1102,73 @@ class GossipNetwork:
             dispatch_counts=dict(self.dispatch_counts),
             final=final,
         )
+
+    # --- fault injection (only when constructed with faults_cfg) ------------
+
+    def quarantined_links(self) -> np.ndarray:
+        """(N, N) bool — links the digest-verification defense has cut
+        (``rejects >= quarantine_after``). All-False without faults or
+        without bank gossip (bankless faults carry no rejection state)."""
+        n = self.topology.num_nodes
+        if self.faults_cfg is None or self._fstate is None:
+            return np.zeros((n, n), bool)
+        return np.asarray(
+            self._fstate.rejects >= self.faults_cfg.quarantine_after
+        )
+
+    def rejection_credit(self) -> Optional[np.ndarray]:
+        """(N,) per-sender trust from cumulative digest rejections
+        (``repro.core.anomaly.rejection_credit``) — 1.0 for clean senders,
+        floored near 0 for quarantined spoofers. ``None`` without a
+        fault-state carry."""
+        if self.faults_cfg is None or self._fstate is None:
+            return None
+        from repro.core import anomaly
+        return np.asarray(anomaly.rejection_credit(self._fstate.rejects))
+
+    def tainted_in_views(self) -> np.ndarray:
+        """(N,) corrupted chunks REFERENCED by rows visible in each node's
+        gated view — the attack-success numerator: with digest
+        verification on this must be identically zero (corrupted payloads
+        are rejected before they can set presence bits, so ``gate_view``
+        never exposes a row backed by them)."""
+        n = self.topology.num_nodes
+        out = np.zeros(n, np.int64)
+        if (self.faults_cfg is None or self._fstate is None
+                or self.bank_cfg is None):
+            return out
+        tainted = np.asarray(self._fstate.tainted)
+        for i in range(n):
+            view = self.read_view(i)
+            slots = np.asarray(view.model_slot)[np.asarray(view.publisher) >= 0]
+            slots = np.unique(slots[slots >= 0])
+            out[i] = int(tainted[i, slots, :].sum())
+        return out
+
+    def fault_report(self) -> Optional[dict]:
+        """Host-side summary of the adversary/defense state: roles, the
+        per-link rejection matrix, quarantined-link count, per-node
+        tainted-chunk counts, and the attack-success numerator
+        (``tainted_in_views``). ``None`` without fault injection."""
+        if self.faults_cfg is None:
+            return None
+        report = {
+            "roles": np.asarray(self.faults_cfg.roles, np.int32),
+            "verify_digests": self.faults_cfg.verify_digests,
+        }
+        if self._fstate is not None:
+            rejects = np.asarray(self._fstate.rejects)
+            report.update(
+                rejects=rejects,
+                rejected_total=int(rejects.sum()),
+                quarantined_links=int(self.quarantined_links().sum()),
+                tainted_chunks=np.asarray(
+                    self._fstate.tainted.sum(axis=(1, 2))
+                ),
+                tainted_in_views=self.tainted_in_views(),
+                rejection_credit=self.rejection_credit(),
+            )
+        return report
 
     # --- the clock ---------------------------------------------------------
 
@@ -1088,9 +1198,11 @@ class GossipNetwork:
 
     def _run_ticks(self, ticks, part_active) -> None:
         """Execute a batch of sync ticks as ONE jitted device call."""
+        fl = self.faults_cfg
         if self.bank_cfg is not None:
             fn = _advance_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg
+                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg,
+                fl,
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,
@@ -1100,7 +1212,21 @@ class GossipNetwork:
                 self._nbr_idx, self._nbr_valid,
                 self._cap_bytes, self._chunk_bytes,
             )
-            if self.obs_cfg is None:
+            if fl is not None:
+                # the faulted body takes (dags, bstate, FSTATE, digest, ...,
+                # period) and returns the FaultState too
+                args = (args[:2] + (self._fstate,) + args[2:]
+                        + (self._period,))
+                if self.obs_cfg is None:
+                    dags, bstate, self._fstate, self._key = self._dispatch(
+                        "advance_bank", fn, *args
+                    )
+                else:
+                    (dags, bstate, self._fstate, self._key, self._metrics,
+                     self._ring) = self._dispatch(
+                        "advance_bank", fn, *args, self._metrics, self._ring,
+                    )
+            elif self.obs_cfg is None:
                 dags, bstate, self._key = self._dispatch(
                     "advance_bank", fn, *args
                 )
@@ -1113,14 +1239,24 @@ class GossipNetwork:
                 )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            fn = _advance_jit(self.cfg.impl, self.mesh, self.obs_cfg)
+            fn = _advance_jit(self.cfg.impl, self.mesh, self.obs_cfg, fl)
             args = (
                 self.replicas.dags, self._key,
                 jnp.asarray(ticks, jnp.int32), jnp.asarray(part_active, bool),
                 self._adj, self._drop, self._stride, self._part_mask,
                 self._nbr_idx, self._nbr_valid,
             )
-            if self.obs_cfg is None:
+            if fl is not None:
+                args = args + (self._period,)
+                if self.obs_cfg is None:
+                    dags, self._key = self._dispatch("advance", fn, *args)
+                else:
+                    dags, self._key, self._metrics, self._ring = (
+                        self._dispatch(
+                            "advance", fn, *args, self._metrics, self._ring,
+                        )
+                    )
+            elif self.obs_cfg is None:
                 dags, self._key = self._dispatch("advance", fn, *args)
             else:
                 dags, self._key, self._metrics, self._ring = self._dispatch(
@@ -1145,9 +1281,10 @@ class GossipNetwork:
 
         limit = jnp.int32(self.cfg.max_events_per_advance)
         fire_cap = jnp.int32(self.cfg.max_ticks_per_advance)
+        fl = self.faults_cfg
         if self.bank_cfg is not None:
             fn = events_lib._advance_events_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg
+                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg, fl
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state.have,
@@ -1160,7 +1297,24 @@ class GossipNetwork:
                 self._part_t0, self._part_t1, self._drop, self._nbr_idx,
                 self._nbr_valid, self._bw_bytes, self._chunk_bytes,
             )
-            if self.obs_cfg is None:
+            if fl is not None:
+                # the faulted body takes the FaultState after sent and
+                # returns it too
+                args = args[:4] + (self._fstate,) + args[4:]
+                if self.obs_cfg is None:
+                    (dags, bstate, self._fstate, self._last_srv, self._key,
+                     qt, qv, done) = self._dispatch(
+                        "advance_events_bank", fn, *args
+                    )
+                else:
+                    (dags, bstate, self._fstate, self._last_srv, self._key,
+                     qt, qv, done, self._metrics, self._ring) = (
+                        self._dispatch(
+                            "advance_events_bank", fn, *args,
+                            self._metrics, self._ring,
+                        )
+                    )
+            elif self.obs_cfg is None:
                 dags, bstate, self._last_srv, self._key, qt, qv, done = (
                     self._dispatch("advance_events_bank", fn, *args)
                 )
@@ -1172,7 +1326,8 @@ class GossipNetwork:
                 )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            fn = events_lib._advance_events_jit(self.cfg.impl, self.obs_cfg)
+            fn = events_lib._advance_events_jit(self.cfg.impl, self.obs_cfg,
+                                                fl)
             args = (
                 self.replicas.dags, self._equeue.time, self._equeue.valid,
                 self._equeue.kind, self._equeue.src, self._equeue.dst,
@@ -1237,6 +1392,7 @@ class GossipNetwork:
         self._note_partition(at_time)
         limit = self.topology.num_nodes * min(self._max_stride, 64)
         stall_limit = min(self._max_stride, 64)
+        fl = self.faults_cfg
         if self.bank_cfg is not None:
             # rows cross in <= num_nodes strided hops; chunks then drain at
             # the per-link budget — extend the bound, keep the stall check
@@ -1244,7 +1400,8 @@ class GossipNetwork:
                 self._max_stride, 64
             )
             fn = _converge_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg
+                self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg,
+                fl,
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,
@@ -1253,7 +1410,19 @@ class GossipNetwork:
                 limit, stall_limit, self._nbr_idx, self._nbr_valid,
                 self._cap_bytes, self._chunk_bytes,
             )
-            if self.obs_cfg is None:
+            if fl is not None:
+                args = (args[:2] + (self._fstate,) + args[2:]
+                        + (self._period,))
+                if self.obs_cfg is None:
+                    (dags, bstate, self._fstate, self._key, tick, done,
+                     synced) = self._dispatch("converge_bank", fn, *args)
+                else:
+                    (dags, bstate, self._fstate, self._key, tick, done,
+                     synced, self._metrics, self._ring) = self._dispatch(
+                        "converge_bank", fn, *args,
+                        self._metrics, self._ring,
+                    )
+            elif self.obs_cfg is None:
                 dags, bstate, self._key, tick, done, synced = self._dispatch(
                     "converge_bank", fn, *args
                 )
@@ -1265,14 +1434,25 @@ class GossipNetwork:
                 )
             self.replicas = self.replicas._replace(dags=dags, bank_state=bstate)
         else:
-            fn = _converge_jit(self.cfg.impl, self.mesh, self.obs_cfg)
+            fn = _converge_jit(self.cfg.impl, self.mesh, self.obs_cfg, fl)
             args = (
                 self.replicas.dags, self._key,
                 jnp.asarray(self.tick, jnp.int32),
                 self._mask_at(at_time), self._adj, self._drop, self._stride,
                 limit, stall_limit, self._nbr_idx, self._nbr_valid,
             )
-            if self.obs_cfg is None:
+            if fl is not None:
+                args = args + (self._period,)
+                if self.obs_cfg is None:
+                    dags, self._key, tick, done, synced = self._dispatch(
+                        "converge", fn, *args
+                    )
+                else:
+                    (dags, self._key, tick, done, synced,
+                     self._metrics, self._ring) = self._dispatch(
+                        "converge", fn, *args, self._metrics, self._ring,
+                    )
+            elif self.obs_cfg is None:
                 dags, self._key, tick, done, synced = self._dispatch(
                     "converge", fn, *args
                 )

@@ -147,10 +147,10 @@ def merge_all(dags: DagState) -> DagState:
     """
     r = dags.publisher.shape[0]
     mask = jnp.ones((1, r), bool)
-    src, ac = kernel_ref.gossip_winner_ref(
+    src, _ = kernel_ref.gossip_winner_ref(
         dags.publish_time, dags.publisher, dags.approval_count, mask
     )
-    merged = dag_lib.merge_select(dags, src, ac, mask=mask)
+    merged = dag_lib.merge_select(dags, src, mask=mask)
     return jax.tree_util.tree_map(lambda x: x[0], merged)
 
 

@@ -24,8 +24,8 @@ from repro.obs.export import (ObsReport, chrome_trace, metrics_jsonl_lines,
                               write_chrome_trace, write_metrics_jsonl)
 from repro.obs.metrics import MetricsState, ObsConfig, init_metrics
 from repro.obs.trace import (KIND_COMMIT, KIND_DELIVER, KIND_DRAIN,
-                             KIND_PARTITION, KIND_PUBLISH, TraceRing,
-                             init_trace)
+                             KIND_PARTITION, KIND_PUBLISH, KIND_REJECT,
+                             TraceRing, init_trace)
 
 
 def observe_round(
@@ -40,18 +40,25 @@ def observe_round(
     bstate=None,              # post-round BankState (bank runs only)
     digest=None,
     bank_impl=None,
+    rejects=None,             # (N, N) i32 cumulative digest rejections
+    rejects_delta=None,       # (N, N) i32 rejections charged this round
+    quarantine_after=0,
 ) -> tuple:
     """THE collector step every obs-enabled loop body runs (jit-safe).
 
     One metrics accumulation + sample, one DELIVER trace append over the
     surviving edges (arg = rows the receiver merged), and — when payload
-    moved — one DRAIN append (arg = bytes). Pure read of its inputs: no
-    PRNG, no writes, so threading it through a carry cannot perturb the
-    simulation (the bitwise claim ``tests/test_obs.py`` pins).
+    moved — one DRAIN append (arg = bytes). Fault runs
+    (``repro.net.faults``) additionally pass their rejection state: the
+    rejected/quarantined series sample from ``rejects`` and each link that
+    rejected chunks this round appends one REJECT record. Pure read of its
+    inputs: no PRNG, no writes, so threading it through a carry cannot
+    perturb the simulation (the bitwise claim ``tests/test_obs.py`` pins).
     """
     delta = _metrics_lib.rows_changed(new_dags, old_dags)
     metrics = _metrics_lib.update(
-        metrics, cfg, t, new_dags, delta, bstate, digest, bank_impl
+        metrics, cfg, t, new_dags, delta, bstate, digest, bank_impl,
+        rejects=rejects, quarantine_after=quarantine_after,
     )
     if cfg.trace:
         if live_edges is not None:
@@ -65,6 +72,11 @@ def observe_round(
             ring = _trace_lib.append_edges(
                 ring, t, KIND_DRAIN, bytes_delta > 0, bytes_delta
             )
+        if rejects_delta is not None:
+            ring = _trace_lib.append_edges(
+                ring, t, KIND_REJECT, rejects_delta > 0,
+                rejects_delta.astype(jnp.float32),
+            )
     return metrics, ring
 
 __all__ = [
@@ -73,5 +85,5 @@ __all__ = [
     "chrome_trace", "write_chrome_trace",
     "metrics_jsonl_lines", "write_metrics_jsonl",
     "KIND_DELIVER", "KIND_DRAIN", "KIND_PUBLISH", "KIND_COMMIT",
-    "KIND_PARTITION",
+    "KIND_PARTITION", "KIND_REJECT",
 ]

@@ -118,6 +118,12 @@ def chrome_trace(report: ObsReport,
                 "name": "commit", "ph": "X", "pid": 0, "tid": dst,
                 "ts": t * _US, "dur": 1.0, "args": {"seq": int(arg)},
             })
+        elif kind == trace_lib.KIND_REJECT:
+            slices.append({
+                "name": "reject", "ph": "X", "pid": 0, "tid": dst,
+                "ts": t * _US, "dur": 1.0,
+                "args": {"src": src, "chunks": arg},
+            })
         elif kind == trace_lib.KIND_PARTITION:
             if arg >= 0.5:
                 part_open = t
@@ -164,7 +170,11 @@ def metrics_jsonl_lines(report: ObsReport) -> list:
     keys = [k for k in report.series if k != "t"]
     for i, t in enumerate(report.series["t"]):
         row = {"kind": "sample", "t": float(t)}
-        row.update({k: float(report.series[k][i]) for k in keys})
+        for k in keys:
+            v = report.series[k][i]
+            # vector-valued series (e.g. per-node staleness) emit a list
+            row[k] = (float(v) if np.ndim(v) == 0
+                      else [float(x) for x in np.ravel(v)])
         lines.append(json.dumps(row))
     return lines
 

@@ -34,7 +34,15 @@ Series (fixed capacity S, one row per round/batch; overflow increments
   ``rows_delta``   total rows merged this round (progress per round);
   ``chunk_lag``    worst referenced-but-unavailable chunk count
                    (``bank.missing_chunks``; 0 without bank gossip);
-  ``bytes_total``  cumulative payload bytes at the sample instant.
+  ``bytes_total``  cumulative payload bytes at the sample instant;
+  ``staleness_node`` (S, N) the PER-NODE staleness vector behind the
+                   ``staleness`` max — who is lagging, not just how far
+                   (an eclipsed or crashed node shows up here long before
+                   the max does on a busy overlay);
+  ``rejected``     cumulative digest-verification rejections
+                   (``repro.net.faults``; 0 without fault injection);
+  ``quarantined``  directed links currently quarantined by the rejection
+                   counter (0 without fault injection).
 
 Capacity discipline matches the repo's fixed-shape rule (``EventQueue``,
 ``InSystemTrace``): shapes are static, overflow is counted, and the host
@@ -88,6 +96,9 @@ class MetricsState(NamedTuple):
     rows_delta: jnp.ndarray   # (S,) i32 total rows merged this round
     chunk_lag: jnp.ndarray    # (S,) i32 max referenced-but-missing chunks
     bytes_total: jnp.ndarray  # (S,) f32 cumulative payload bytes
+    staleness_node: jnp.ndarray  # (S, N) i32 per-node row lag behind union
+    rejected: jnp.ndarray     # (S,) i32 cumulative digest rejections
+    quarantined: jnp.ndarray  # (S,) i32 quarantined directed links
 
 
 def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
@@ -104,6 +115,9 @@ def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
         rows_delta=jnp.zeros((s,), jnp.int32),
         chunk_lag=jnp.zeros((s,), jnp.int32),
         bytes_total=jnp.zeros((s,), jnp.float32),
+        staleness_node=jnp.zeros((s, num_nodes), jnp.int32),
+        rejected=jnp.zeros((s,), jnp.int32),
+        quarantined=jnp.zeros((s,), jnp.int32),
     )
 
 
@@ -132,6 +146,8 @@ def update(
     bstate: Optional[bank_lib.BankState] = None,
     digest: Optional[jnp.ndarray] = None,
     bank_impl: Optional[str] = None,
+    rejects: Optional[jnp.ndarray] = None,   # (N, N) i32 cumulative rejections
+    quarantine_after: int = 0,
 ) -> MetricsState:
     """Accumulate one round and sample one series row (jit-safe, pure read).
 
@@ -139,10 +155,19 @@ def update(
     under a mesh the union fold and lag reductions are global, so GSPMD
     inserts the collectives (the sampled values are the same as the
     single-device ones, like every other cross-replica reduction here).
+    ``rejects`` is the fault layer's cumulative rejection matrix (fault
+    runs only); without it the rejected/quarantined samples stay zero.
     """
     union = replica_lib.merge_all(dags)
     tips = dag_lib.num_tips(union, t, cfg.tau_max)
-    stale = jnp.max(replica_lib.missing_vs_union(dags, union))
+    stale_node = replica_lib.missing_vs_union(dags, union)
+    stale = jnp.max(stale_node)
+    if rejects is not None:
+        rejected = jnp.sum(rejects)
+        quar = jnp.sum((rejects >= quarantine_after).astype(jnp.int32))
+    else:
+        rejected = jnp.zeros((), jnp.int32)
+        quar = jnp.zeros((), jnp.int32)
     if bstate is not None:
         lag = jnp.max(
             bank_lib.missing_chunks(dags, bstate, digest, impl=bank_impl)
@@ -173,4 +198,11 @@ def update(
         ),
         chunk_lag=m.chunk_lag.at[slot].set(lag.astype(jnp.int32), mode="drop"),
         bytes_total=m.bytes_total.at[slot].set(total, mode="drop"),
+        staleness_node=m.staleness_node.at[slot].set(
+            stale_node.astype(jnp.int32), mode="drop"
+        ),
+        rejected=m.rejected.at[slot].set(
+            rejected.astype(jnp.int32), mode="drop"
+        ),
+        quarantined=m.quarantined.at[slot].set(quar, mode="drop"),
     )

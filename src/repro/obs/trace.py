@@ -28,7 +28,10 @@ Record kinds (``arg`` meaning per kind):
   ``KIND_COMMIT``     node landed its transaction (host record at t1);
                       arg = global sequence number;
   ``KIND_PARTITION``  overlay partition transition (host record);
-                      arg = 1.0 begin / 0.0 heal, src = dst = -1.
+                      arg = 1.0 begin / 0.0 heal, src = dst = -1;
+  ``KIND_REJECT``     receiver dst rejected chunks from src that failed
+                      digest verification (``repro.net.faults``);
+                      arg = chunks rejected this round.
 
 ``repro.obs.export`` turns a drained ring into Chrome trace-event JSON
 (one Perfetto track per node) and the metrics series into JSONL.
@@ -45,6 +48,7 @@ KIND_DRAIN = 1
 KIND_PUBLISH = 2
 KIND_COMMIT = 3
 KIND_PARTITION = 4
+KIND_REJECT = 5
 
 KIND_NAMES = {
     KIND_DELIVER: "deliver",
@@ -52,6 +56,7 @@ KIND_NAMES = {
     KIND_PUBLISH: "publish",
     KIND_COMMIT: "commit",
     KIND_PARTITION: "partition",
+    KIND_REJECT: "reject",
 }
 
 

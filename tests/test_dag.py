@@ -197,17 +197,20 @@ def test_merge_is_associative():
 
 
 def test_merge_counters_never_decrease():
-    """approval_count for a shared row and the per-node contribution counters
-    union by max — merging can only add knowledge."""
+    """Approver sets for a shared row union exactly (distinct approvers from
+    each side all count once) and the per-node contribution counters merge by
+    max — merging can only add knowledge."""
     base = publish_n(fresh_dag(), 3)
     approve0 = jnp.asarray([0, dag_lib.NO_TX], jnp.int32)
     approve01 = jnp.asarray([0, 1], jnp.int32)
     a = publish_row(base, 3, publisher=1, t=5.0, approvals=approve0)
     b = publish_row(base, 4, publisher=2, t=5.5, approvals=approve01)
+    assert int(a.approval_count[0]) == 1 and int(b.approval_count[0]) == 1
     for m in (dag_lib.merge(a, b), dag_lib.merge(b, a)):
-        assert int(m.approval_count[0]) == max(
-            int(a.approval_count[0]), int(b.approval_count[0])
-        )
+        # row 0 was approved by node 1 on replica a and node 2 on replica b:
+        # the exact union counts both (union-by-max would collapse to 1)
+        assert int(m.approval_count[0]) == 2
+        assert bool(m.approvers[0, 1]) and bool(m.approvers[0, 2])
         assert int(m.approval_count[1]) == int(b.approval_count[1])
         assert np.all(
             np.asarray(m.contributing_m0)

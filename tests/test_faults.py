@@ -1,0 +1,407 @@
+"""Adversarial fault injection (`repro.net.faults`).
+
+Pins the acceptance invariants of the robustness layer:
+
+* ZERO PERTURBATION: ``faults=None`` — and an all-HONEST ``FaultConfig``,
+  whose role draws are salted off the round key — is BITWISE the
+  un-faulted run (final ReplicaSet, bank state, PRNG key), property-
+  tested over engines, round impls, overlays, partitions, and the bank;
+* the SPOOF defense holds: with digest verification on, a corrupted
+  chunk NEVER enters any gated view (attack-success numerator == 0 over
+  overlays x engines), rejections accrue against the spoofer, and its
+  out-links are quarantined within bounded rounds; with verification
+  off the same attack demonstrably lands (the defense is load-bearing);
+* role semantics on known schedules: a CRASH window silences a node and
+  ends (recovery, including through a concurrent partition), an ECLIPSE
+  attacker monopolizes its target's intake (pinned on the star hub —
+  the paper's single-point-of-failure overlay), SELECTIVE forwarding at
+  p=0 blocks and at p=1 is bitwise honest, SYBIL forges approver-set
+  inflation on the attacker's own rows;
+* the telemetry coupling: fault runs surface rejected/quarantined
+  series, KIND_REJECT trace records, and obs-on stays bitwise obs-off
+  even under active faults.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dag as dag_lib
+from repro.core.anomaly import rejection_credit
+from repro.net import faults as faults_lib
+from repro.net import gossip as gossip_lib
+from repro.net import replica as replica_lib
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.faults import FaultConfig
+from repro.obs import KIND_REJECT, ObsConfig
+
+CAP, K = 32, 2
+BANK = BankGossipConfig(chunks_per_slot=4)
+
+
+def genesis(num_nodes):
+    d = dag_lib.empty_dag(CAP, K, num_nodes + 1)
+    return dag_lib.publish(
+        d, jnp.asarray(num_nodes, jnp.int32), jnp.float32(0.0),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(0, jnp.int32),
+    )
+
+
+def make_net(top, engine="ticks", faults=None, obs=None, bank_cfg=None,
+             impl="fused", partition=None, seed=7, sync_period=1.0):
+    return gossip_lib.GossipNetwork(
+        genesis(top.num_nodes), bank=jnp.zeros((CAP, 8)), top=top,
+        cfg=gossip_lib.GossipConfig(sync_period=sync_period, seed=seed,
+                                    impl=impl, engine=engine),
+        partition=partition, bank_cfg=bank_cfg, obs_cfg=obs,
+        faults_cfg=faults,
+    )
+
+
+def publish_on(net, node, seq, t):
+    d = replica_lib.publish_local(
+        net.read(node), seq, jnp.asarray(node, jnp.int32), jnp.float32(t),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(seq % CAP, jnp.int32),
+    )
+    net.write(node, d)
+    if net.bank_cfg is not None:
+        net.bank_commit(node, seq % CAP, jnp.full((8,), float(seq)))
+
+
+def assert_nets_bitwise(a, b, msg=""):
+    for name in dag_lib.DagState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.replicas.dags, name)),
+            np.asarray(getattr(b.replicas.dags, name)),
+            err_msg=f"{msg}{name}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(a._key), np.asarray(b._key), err_msg=f"{msg}key"
+    )
+    if a.bank_cfg is not None:
+        for f in ("have", "credit", "sent"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.replicas.bank_state, f)),
+                np.asarray(getattr(b.replicas.bank_state, f)),
+                err_msg=f"{msg}{f}",
+            )
+
+
+def honest(n):
+    return FaultConfig(roles=(faults_lib.ROLE_HONEST,) * n)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance invariant: faults-off (and all-honest) is bitwise un-faulted
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+@pytest.mark.parametrize("bank", [None, BANK])
+def test_all_honest_bitwise_unfaulted_unit(engine, bank):
+    part = gossip_lib.PartitionSchedule(
+        assignment=topo.split_halves(6), t_start=1.5, t_end=3.5,
+    )
+    top = topo.ring(6, link_latency=1.0, drop=0.3, seed=3)
+    a = make_net(top, engine, faults=None, bank_cfg=bank, partition=part)
+    b = make_net(top, engine, faults=honest(6), bank_cfg=bank, partition=part)
+    publish_on(a, 0, 1, 0.3)
+    publish_on(b, 0, 1, 0.3)
+    for t in (1.0, 2.5, 6.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+    assert a.converge(at_time=20.0) == b.converge(at_time=20.0)
+    assert_nets_bitwise(a, b, msg="converge:")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    overlay=st.sampled_from(["ring", "er", "star"]),
+    engine=st.sampled_from(["ticks", "events"]),
+    impl=st.sampled_from(["fused", "scan"]),
+    split=st.booleans(),
+)
+def test_property_all_honest_bitwise_unfaulted(seed, overlay, engine, impl,
+                                               split):
+    """Property (acceptance): the fault layer's role draws are salted off
+    the round key, so an all-honest config consumes NOTHING from the main
+    PRNG stream — bitwise the un-faulted run over any overlay, engine,
+    round impl, partition schedule, and publish interleaving (the
+    ``faults=None`` analogue of ``tests/test_obs.py``)."""
+    n = 8
+    builders = {
+        "ring": lambda: topo.ring(n, link_latency=1.0, drop=0.3,
+                                  seed=seed % 997),
+        "er": lambda: topo.erdos_renyi(n, 0.4, link_latency=1.0, drop=0.3,
+                                       seed=seed % 997),
+        "star": lambda: topo.star(n, link_latency=1.0, drop=0.3),
+    }
+    part = (
+        gossip_lib.PartitionSchedule(
+            assignment=topo.split_halves(n), t_start=1.5, t_end=3.5,
+        ) if split else None
+    )
+    top = builders[overlay]()
+    a = make_net(top, engine, faults=None, impl=impl, partition=part,
+                 seed=seed % 1013)
+    b = make_net(top, engine, faults=honest(n), impl=impl, partition=part,
+                 seed=seed % 1013)
+    rng = np.random.default_rng(seed)
+    for seq in range(1, 4):
+        node = int(rng.integers(0, n))
+        publish_on(a, node, seq, 0.1 * seq)
+        publish_on(b, node, seq, 0.1 * seq)
+    for t in (1.0, 2.5, 5.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+
+
+def test_selective_forward_prob_one_is_bitwise_honest():
+    """p=1 selective forwarding suppresses nothing, and its Bernoulli
+    draws live on the salted side stream — bitwise the honest run."""
+    top = topo.ring(6, link_latency=1.0)
+    sel = FaultConfig(roles=(0, 3, 0, 3, 0, 0), forward_prob=1.0)
+    a = make_net(top, faults=honest(6))
+    b = make_net(top, faults=sel)
+    publish_on(a, 0, 1, 0.2)
+    publish_on(b, 0, 1, 0.2)
+    for t in (1.0, 3.0, 5.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+
+
+# ---------------------------------------------------------------------------
+# The SPOOF defense: corrupted chunks never reach a gated view
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    overlay=st.sampled_from(["ring", "star", "full"]),
+    engine=st.sampled_from(["ticks", "events"]),
+)
+def test_property_spoofed_chunk_never_enters_gated_view(seed, overlay,
+                                                        engine):
+    """Property (acceptance): under an active spoofer with digest
+    verification on, the attack-success numerator — corrupted chunks
+    visible through any node's gated view — is ZERO, the spoofer accrues
+    rejections, and its used out-links are quarantined."""
+    n = 6
+    builders = {
+        "ring": lambda: topo.ring(n, link_latency=1.0),
+        "star": lambda: topo.star(n, link_latency=1.0),
+        "full": lambda: topo.full(n, link_latency=1.0),
+    }
+    spoofer = 0 if overlay == "star" else int(seed % n)   # star hub relays
+    roles = tuple(
+        faults_lib.ROLE_SPOOF if i == spoofer else faults_lib.ROLE_HONEST
+        for i in range(n)
+    )
+    cfg = FaultConfig(roles=roles, spoof_rate=1.0, verify_digests=True,
+                      quarantine_after=2)
+    net = make_net(builders[overlay](), engine, faults=cfg, bank_cfg=BANK,
+                   seed=seed % 1013)
+    publish_on(net, spoofer, 1, 0.2)          # everyone must fetch from it
+    publish_on(net, (spoofer + 1) % n, 2, 0.3)
+    for t in np.arange(1.0, 11.0, 1.0):
+        net.advance(float(t))
+    rep = net.fault_report()
+    np.testing.assert_array_equal(
+        np.asarray(rep["tainted_in_views"]), 0,
+        err_msg="corrupted chunk entered a gated view",
+    )
+    assert rep["rejected_total"] > 0
+    # bounded-round quarantine: some receiver cut its link to the spoofer
+    assert net.quarantined_links()[:, spoofer].any()
+    credit = rep["rejection_credit"]
+    assert credit[spoofer] < 1.0
+    clean = [i for i in range(n) if i != spoofer]
+    np.testing.assert_array_equal(credit[clean], 1.0)
+
+
+def test_spoof_without_verification_lands():
+    """Defense off -> the same attack demonstrably poisons views: the
+    tainted payload spreads and becomes visible. Documents that digest
+    verification, not luck, is what keeps the numerator at zero."""
+    n = 5
+    cfg = FaultConfig(roles=(faults_lib.ROLE_SPOOF,) + (0,) * (n - 1),
+                      spoof_rate=1.0, verify_digests=False)
+    net = make_net(topo.full(n, link_latency=1.0), faults=cfg, bank_cfg=BANK)
+    publish_on(net, 0, 1, 0.2)
+    for t in np.arange(1.0, 8.0, 1.0):
+        net.advance(float(t))
+    rep = net.fault_report()
+    assert np.asarray(rep["tainted_in_views"]).sum() > 0
+    assert rep["rejected_total"] == 0             # nothing was checked
+
+
+def test_rejected_transfer_is_refetched_from_alternate_holder():
+    """Bounded re-fetch: on a ring the spoofer's victim re-requests from
+    its other neighbor once the spoofed link is quarantined — the row's
+    payload still arrives everywhere (liveness under the defense)."""
+    n = 6
+    cfg = FaultConfig(roles=(0, 0, 0, faults_lib.ROLE_SPOOF, 0, 0),
+                      spoof_rate=1.0, verify_digests=True, quarantine_after=2)
+    net = make_net(topo.ring(n, link_latency=1.0), faults=cfg, bank_cfg=BANK)
+    publish_on(net, 0, 1, 0.2)                    # honest publisher
+    for t in np.arange(1.0, 16.0, 1.0):
+        net.advance(float(t))
+    # node 3 relays corrupted copies; 2 and 4 must pull around the ring
+    rep = net.fault_report()
+    np.testing.assert_array_equal(np.asarray(rep["tainted_in_views"]), 0)
+    assert int(net.missing_chunks().max()) == 0   # payload fully delivered
+    assert net.synced()
+
+
+def test_rejection_credit_scores():
+    rejects = jnp.zeros((4, 4), jnp.int32).at[1, 3].set(5).at[2, 3].set(2)
+    credit = np.asarray(rejection_credit(rejects))
+    np.testing.assert_array_equal(credit[:3], 1.0)   # clean senders exact 1
+    assert credit[3] == pytest.approx(0.05)          # floored spoofer
+
+
+# ---------------------------------------------------------------------------
+# Role semantics on known schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+def test_crash_window_silences_then_recovers(engine):
+    cfg = FaultConfig(roles=(faults_lib.ROLE_CRASH, 0, 0, 0, 0, 0),
+                      crash_start=0.0, crash_end=5.0)
+    net = make_net(topo.ring(6, link_latency=1.0), engine, faults=cfg)
+    publish_on(net, 0, 1, 0.2)
+    net.advance(4.0)
+    assert (np.asarray(net.missing_rows()) > 0).sum() == 5   # still silent
+    net.advance(12.0)
+    assert net.synced()                                       # churned back
+
+
+def test_crash_during_partition_recovers_after_both_heal():
+    """A node crashes across a partition window: neither the partition
+    healing alone (node still crashed) nor the crash ending alone is
+    enough until ticks flow again — then the overlay pulls every replica
+    back to the union, including rows published by the crashed node
+    while it was down."""
+    n = 6
+    part = gossip_lib.PartitionSchedule(
+        assignment=topo.split_halves(n), t_start=1.5, t_end=3.5,
+    )
+    cfg = FaultConfig(roles=(faults_lib.ROLE_CRASH,) + (0,) * (n - 1),
+                      crash_start=0.0, crash_end=6.0)
+    net = make_net(topo.full(n, link_latency=1.0), faults=cfg,
+                   partition=part)
+    publish_on(net, 0, 1, 0.2)        # on the node that is about to crash
+    publish_on(net, 3, 2, 0.3)        # on the far side of the coming split
+    net.advance(3.0)                  # inside crash AND partition
+    assert (np.asarray(net.missing_rows()) > 0).any()
+    net.advance(5.0)                  # partition healed, node 0 still down
+    assert np.asarray(net.missing_rows())[0] > 0 or (
+        np.asarray(net.missing_rows()) > 0
+    ).any()
+    net.advance(10.0)                 # crash window over too
+    assert net.synced()
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+def test_eclipse_on_star_hub_monopolizes_intake(engine):
+    """Spoke 2 eclipses the hub of a star: the hub hears ONLY the
+    attacker, so an honest spoke's row never reaches the hub — and,
+    since every spoke depends on the hub, never reaches anyone else.
+    The attacker's own rows still land (the monopoly, not an outage)."""
+    n = 6
+    cfg = FaultConfig(roles=(0, 0, faults_lib.ROLE_ECLIPSE, 0, 0, 0),
+                      eclipse_target=0)
+    net = make_net(topo.star(n, link_latency=1.0), engine, faults=cfg)
+    publish_on(net, 1, 1, 0.2)        # honest spoke
+    publish_on(net, 2, 2, 0.3)        # the attacker
+    for t in np.arange(1.0, 8.0, 1.0):
+        net.advance(float(t))
+    assert np.asarray(net.missing_rows())[0] > 0   # hub lags the union
+    # attacker's row still landed at the hub; the honest spoke's never did
+    pubs = np.asarray(net.read(0).publisher)
+    assert (pubs == 2).any()
+    assert not (pubs == 1).any()
+
+
+def test_selective_forward_prob_zero_blocks_sender():
+    cfg = FaultConfig(roles=(faults_lib.ROLE_SELECTIVE, 0, 0, 0, 0, 0),
+                      forward_prob=0.0)
+    net = make_net(topo.ring(6, link_latency=1.0), faults=cfg)
+    publish_on(net, 0, 1, 0.2)
+    net.advance(10.0)
+    assert (np.asarray(net.missing_rows()) > 0).sum() == 5
+
+
+def test_sybil_inflates_approvals_on_own_rows_only():
+    n = 6
+    cfg = FaultConfig(roles=(0, 0, faults_lib.ROLE_SYBIL, 0, 0, 0))
+    net = make_net(topo.full(n, link_latency=1.0), faults=cfg)
+    publish_on(net, 2, 1, 0.2)        # the sybil's row
+    publish_on(net, 1, 2, 0.3)        # an honest row
+    net.advance(2.0)
+    u = net.union()
+    ac = np.asarray(u.approval_count)
+    appr = np.asarray(u.approvers)
+    assert ac[1] >= n                 # forged full approver set
+    assert appr[1].sum() == ac[1]     # exact-union invariant still holds
+    assert ac[2] == 0                 # honest row untouched
+
+
+# ---------------------------------------------------------------------------
+# Config validation
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_bad_configs():
+    top = topo.ring(4)
+    with pytest.raises(ValueError, match="roles"):
+        make_net(top, faults=FaultConfig(roles=(0, 0, 0)))
+    with pytest.raises(ValueError, match="eclipse"):
+        make_net(top, faults=FaultConfig(roles=(2, 0, 0, 0)))
+    with pytest.raises(ValueError, match="bank"):
+        make_net(top, faults=FaultConfig(roles=(4, 0, 0, 0)))
+    with pytest.raises(ValueError, match="quarantine"):
+        make_net(top, faults=FaultConfig(roles=(0,) * 4, quarantine_after=0),
+                 bank_cfg=BANK)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry coupling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+def test_fault_telemetry_series_and_reject_trace(engine):
+    n = 5
+    cfg = FaultConfig(roles=(0, 0, 0, 0, faults_lib.ROLE_SPOOF),
+                      spoof_rate=1.0, verify_digests=True, quarantine_after=3)
+    a = make_net(topo.full(n, link_latency=1.0), engine, faults=cfg,
+                 bank_cfg=BANK)
+    b = make_net(topo.full(n, link_latency=1.0), engine, faults=cfg,
+                 bank_cfg=BANK, obs=ObsConfig())
+    publish_on(a, 4, 1, 0.2)
+    publish_on(b, 4, 1, 0.2)
+    for t in np.arange(1.0, 8.0, 1.0):
+        a.advance(float(t))
+        b.advance(float(t))
+    # obs never perturbs the FAULTED trajectory either
+    assert_nets_bitwise(a, b, msg="obs-on faulted:")
+    np.testing.assert_array_equal(
+        np.asarray(a._fstate.rejects), np.asarray(b._fstate.rejects)
+    )
+    rep = b.obs_report()
+    assert rep.series["rejected"][-1] > 0
+    assert rep.series["quarantined"][-1] > 0
+    assert rep.series["staleness_node"].shape[1] == n
+    assert (rep.trace["kind"] == KIND_REJECT).sum() > 0
+    assert "rejected" in rep.final and rep.final["rejected"] > 0

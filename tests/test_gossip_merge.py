@@ -36,13 +36,13 @@ def random_stacked(rng, r, cap=CAP, num_nodes=8, k=K) -> dag_lib.DagState:
     CRDT happy path."""
     pub = rng.integers(-1, num_nodes, (r, cap)).astype(np.int32)
     t = np.where(pub >= 0, rng.integers(0, 4, (r, cap)) * 0.5, 0.0)
+    approvers = (rng.random((r, cap, num_nodes)) < 0.3) & (pub[..., None] >= 0)
     return dag_lib.DagState(
         publisher=jnp.asarray(pub),
         publish_time=jnp.asarray(t, jnp.float32),
         approvals=jnp.asarray(rng.integers(-1, cap, (r, cap, k)), jnp.int32),
-        approval_count=jnp.asarray(
-            np.where(pub >= 0, rng.integers(0, 5, (r, cap)), 0), jnp.int32
-        ),
+        approvers=jnp.asarray(approvers),
+        approval_count=jnp.asarray(approvers.sum(-1), jnp.int32),
         accuracy=jnp.asarray(rng.random((r, cap)), jnp.float32),
         auth_tag=jnp.asarray(rng.random((r, cap)), jnp.float32),
         model_slot=jnp.asarray(rng.integers(-1, cap, (r, cap)), jnp.int32),

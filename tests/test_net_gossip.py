@@ -150,10 +150,12 @@ def test_partition_then_heal_converges_identically(impl):
     union = net.union()
     for a, b in zip(jax.tree_util.tree_leaves(merged), jax.tree_util.tree_leaves(union)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # both divergent rows survive, and the shared ancestor's approvals
-    # union-by-max across the two concurrent credits
+    # both divergent rows survive, and the shared ancestor's concurrent
+    # credits from either side of the partition BOTH count after healing
+    # (the exact approver-set union; union-by-max used to collapse them)
     assert int(union.publisher[2]) == 1 and int(union.publisher[3]) == 5
-    assert int(union.approval_count[1]) == 1
+    assert int(union.approval_count[1]) == 2
+    assert bool(union.approvers[1, 1]) and bool(union.approvers[1, 5])
 
 
 @pytest.mark.parametrize("impl", IMPLS)
