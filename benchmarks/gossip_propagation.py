@@ -24,8 +24,10 @@ one, bank gossip at unlimited capacity diverges from the bankless path,
 the event engine's degenerate uniform-delay limit diverges from the tick
 path, an obs-instrumented run diverges from the obs-off path, the warmed
 obs collectors cost more than 10% wall time, an all-honest fault config
-diverges from the un-faulted path, or a spoofed chunk survives digest
-verification into a gated view — the CI tripwires.
+diverges from the un-faulted path, a spoofed chunk survives digest
+verification into a gated view, the identity delta codec diverges from
+the uncompressed bank path, or a compressed codec falls below a 2x byte
+reduction on the constrained 1 Mbps class — the CI tripwires.
 It also exports the last obs-on run as ``obs_sample.trace.json`` (the
 Perfetto-loadable artifact CI uploads).
 """
@@ -46,6 +48,7 @@ from repro.net import gossip as gossip_lib
 from repro.net import mesh as mesh_lib
 from repro.net import replica as replica_lib
 from repro.net import topology as topo
+from repro.kernels.delta_codec import DeltaCodec
 from repro.net.bank import BankGossipConfig
 from repro.net.faults import ROLE_HONEST, ROLE_SPOOF, FaultConfig
 from repro.obs import ObsConfig, write_chrome_trace
@@ -244,7 +247,8 @@ def _results_bitwise_equal(a, b) -> bool:
     )
 
 
-def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg, obs=None):
+def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg, obs=None,
+                engine="ticks"):
     dcfg = default_dagfl_config(num_nodes=n)
     sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
                     seed=seed)
@@ -253,7 +257,7 @@ def _run_banked(n, iterations, seed, impl, bandwidth, bank_cfg, obs=None):
         task, nodes, dcfg, sim, gval,
         topology=topo.ring(n, seed=seed, bandwidth=bandwidth),
         gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=seed, impl=impl),
-        bank_gossip=bank_cfg, obs=obs,
+        bank_gossip=bank_cfg, obs=obs, engine=engine,
     )
 
 
@@ -324,6 +328,131 @@ def run_bank_gossip(
         ))
     if record is not None:
         record["bank_gossip"] = rows
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Wire compression: identity-codec equivalence + accuracy-vs-bytes Pareto
+# ---------------------------------------------------------------------------
+
+
+def run_delta_codec(
+    n: int = 16, iterations: int = 40, seed: int = 0,
+    sweeps=(("lte_10mbps", 7e6), ("constrained_1mbps", 7e6),
+            ("constrained_1mbps", 1.75e5)),
+    codec_kinds=("int8", "int4", "topk"),
+    ident_n: int = 8, ident_iterations: int = 10,
+    record: dict = None,
+):
+    """Compressed-delta gossip (``repro.kernels.delta_codec``) measurements.
+
+    Two claims, machine-checked into ``BENCH_gossip_sync.json`` under
+    ``delta_codec``:
+
+    * IDENTITY (the CI tripwire): an explicit ``DeltaCodec(kind="none")``
+      is bitwise the ``codec=None`` bank path end to end — identical
+      accuracy curve, timing, and union ledger — on BOTH engines and with
+      the fault layer armed (active spoofers, digests verified): the
+      identity codec keys the very same jitted programs the uncompressed
+      path compiles, not equivalent ones;
+    * PARETO: sweeping the quantization/sparsification codecs over
+      (Table-I link class, payload size) points trades accuracy against
+      bytes on the wire. ``byte_reduction`` is the measured byte-meter
+      ratio of the compressed run to the uncompressed one — NOT the
+      codec's nominal ``wire_ratio`` — so it only materializes when the
+      compressed run can DRAIN its backlog and go idle while the raw run
+      keeps paying. The grid spans both regimes honestly: at the paper's
+      phi = 7 MB on the 1 Mbps class even 7.5x compression cannot keep up
+      with one publish per second, both runs stay budget-limited, and the
+      reduction collapses to ~1x (what compression buys there is a
+      smaller chunk BACKLOG, the ``final_missing`` column); at a
+      bench-scale 175 KB payload the compressed run syncs fully and the
+      meter shows the near-nominal reduction — the acceptance row
+      (int4: >= 4x fewer bytes, accuracy within 1% of the raw run).
+      ``acc_drop`` is the accuracy the lossy format actually cost
+      (negative = the codec run ended AHEAD because payloads arrived
+      sooner).
+    """
+    rows = []
+
+    def bank(codec=None, sb=7e6):
+        return BankGossipConfig(chunks_per_slot=4, slot_bytes=sb, codec=codec)
+
+    # identity: both engines over finite links so pricing is exercised
+    for engine in ("ticks", "events"):
+        base = _run_banked(ident_n, ident_iterations, seed, "fused", 10e6,
+                           bank(), engine=engine)
+        ident = _run_banked(ident_n, ident_iterations, seed, "fused", 10e6,
+                            bank(DeltaCodec(kind="none")), engine=engine)
+        equivalent = _results_bitwise_equal(base, ident)
+        emit(
+            f"gossip/delta_codec/identity/{engine}", float(equivalent),
+            f"bitwise_equal_uncompressed={equivalent}",
+        )
+        rows.append(dict(
+            kind="identity", engine=engine, faults=False, n=ident_n,
+            iterations=ident_iterations,
+            bitwise_equal_uncompressed=bool(equivalent),
+        ))
+    # identity with the fault layer armed: spoofers active, digests verified
+    spoof = FaultConfig(
+        roles=tuple(ROLE_SPOOF if i in (1, 2) else ROLE_HONEST
+                    for i in range(ident_n)),
+        spoof_rate=1.0, verify_digests=True, quarantine_after=3,
+    )
+    base = _run_faulted(ident_n, ident_iterations, seed, "ticks", spoof,
+                        bank=bank())
+    ident = _run_faulted(ident_n, ident_iterations, seed, "ticks", spoof,
+                         bank=bank(DeltaCodec(kind="none")))
+    equivalent = _results_bitwise_equal(base, ident)
+    emit(
+        "gossip/delta_codec/identity/faulted", float(equivalent),
+        f"bitwise_equal_uncompressed={equivalent}",
+    )
+    rows.append(dict(
+        kind="identity", engine="ticks", faults=True, n=ident_n,
+        iterations=ident_iterations,
+        bitwise_equal_uncompressed=bool(equivalent),
+    ))
+
+    # Pareto: codecs x (Table-I link class, payload size), measured off
+    # the byte meter
+    all_kinds = ("none",) + tuple(codec_kinds)
+    for cls, sb in sweeps:
+        bits = topo.TABLE1_LINK_CLASSES[cls]
+        per = {}
+        for kind in all_kinds:
+            codec = None if kind == "none" else DeltaCodec(kind=kind)
+            res = _run_banked(n, iterations, seed, "fused", bits,
+                              bank(codec, sb), obs=ObsConfig())
+            rep = res.extras["obs"]
+            per[kind] = dict(
+                bytes=float(rep.final["bytes_sent"]),
+                acc=float(res.accs[-1]),
+                missing=int(rep.final["chunk_lag"]),
+                ratio=float(codec.wire_ratio()) if codec is not None else 1.0,
+            )
+        base_row = per["none"]
+        for kind in all_kinds:
+            d = per[kind]
+            reduction = base_row["bytes"] / max(d["bytes"], 1e-9)
+            acc_drop = base_row["acc"] - d["acc"]
+            emit(
+                f"gossip/delta_codec/pareto/{cls}/phi{sb:g}/{kind}",
+                reduction,
+                f"bytes={d['bytes']:.3g};final_acc={d['acc']:.3f};"
+                f"acc_drop={acc_drop:+.4f};final_missing={d['missing']};"
+                f"wire_ratio={d['ratio']:.4f}",
+            )
+            rows.append(dict(
+                kind="pareto", link_class=cls, codec=kind,
+                wire_ratio=d["ratio"], bytes_sent=d["bytes"],
+                byte_reduction=float(reduction), final_acc=d["acc"],
+                acc_drop=float(acc_drop), final_missing=d["missing"],
+                n=n, iterations=iterations, slot_bytes=float(sb),
+            ))
+    if record is not None:
+        record["delta_codec"] = rows
     return rows
 
 
@@ -636,6 +765,7 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     run_sharded_sync(record=record)
     run_dispatch_batching(record=record)
     run_bank_gossip(record=record)
+    run_delta_codec(record=record)
     run_event_engine(record=record)
     run_observability(record=record)
     run_fault_suite(record=record)
@@ -710,6 +840,7 @@ def run(iterations: int = 150, num_nodes: int = 25, seed: int = 0,
     run_dispatch_batching(iterations=iterations, num_nodes=num_nodes, seed=seed,
                           record=record)
     run_bank_gossip(seed=seed, record=record)
+    run_delta_codec(seed=seed, record=record)
     run_event_engine(seed=seed, record=record)
     run_observability(seed=seed, record=record)
     write_bench_json(record, json_path)
@@ -727,8 +858,12 @@ def smoke(json_path: str = JSON_PATH) -> int:
     obs-instrumented run that is no longer bitwise the obs-off path, a
     warmed obs-on run costing more than 10% extra wall time, an
     all-honest fault config that is no longer bitwise the un-faulted
-    path, or a spoofed chunk that survives digest verification into a
-    gated view (attack_success != 0 / zero rejections).
+    path, a spoofed chunk that survives digest verification into a
+    gated view (attack_success != 0 / zero rejections), an identity
+    delta codec (``DeltaCodec(kind="none")``) that is no longer bitwise
+    the ``codec=None`` bank path (engines x faults), or a compressed
+    codec whose measured byte reduction drops below 2x on the
+    constrained 1 Mbps class.
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -739,6 +874,11 @@ def smoke(json_path: str = JSON_PATH) -> int:
     )
     sharded_rows = run_sharded_sync(reps=5, record=record)
     bank_rows = run_bank_gossip(n=8, iterations=10, record=record)
+    codec_rows = run_delta_codec(
+        n=8, iterations=10, sweeps=(("constrained_1mbps", 7e5),),
+        codec_kinds=("int4",), ident_n=6, ident_iterations=8,
+        record=record,
+    )
     event_rows = run_event_engine(
         n=6, iterations=8, impls=("fused",), insystem_horizon=0.0,
         record=record,
@@ -770,6 +910,24 @@ def smoke(json_path: str = JSON_PATH) -> int:
             ok = False
     if not any(r["kind"] == "equivalence" for r in bank_rows):
         print("# SMOKE FAIL: no bank-gossip equivalence rows recorded")
+        ok = False
+    for row in codec_rows:
+        if row["kind"] == "identity" and not row["bitwise_equal_uncompressed"]:
+            print(f"# SMOKE FAIL: identity codec diverged from the "
+                  f"uncompressed bank path: {row}")
+            ok = False
+        if (row["kind"] == "pareto" and row["codec"] != "none"
+                and row["link_class"] == "constrained_1mbps"
+                and row["byte_reduction"] < 2.0):
+            print(f"# SMOKE FAIL: codec byte reduction below 2x on the "
+                  f"constrained link class: {row}")
+            ok = False
+    if not any(r["kind"] == "identity" for r in codec_rows):
+        print("# SMOKE FAIL: no identity-codec rows recorded")
+        ok = False
+    if not any(r["kind"] == "pareto" and r["codec"] != "none"
+               for r in codec_rows):
+        print("# SMOKE FAIL: no compressed pareto rows recorded")
         ok = False
     for row in event_rows:
         if row["kind"] == "equivalence" and not row["bitwise_equal_ticks"]:

@@ -46,6 +46,21 @@ def run():
     emit("kernel/flash_attention/s256", _time(lambda: ops.flash_attention(q, kk, vv)),
          f"jnp_ref_us={_time(lambda: ref.mqa_attention_ref(q, kk, vv)):.0f}")
 
+    # delta codec: blocked quantization + top-k sparsification (the wire
+    # compression path, repro.kernels.delta_codec; codes are exact vs the
+    # oracle, scales agree to float rounding)
+    x = jax.random.normal(key, (1024, 128), jnp.float32) * 0.02
+    for name, qmax in (("int8", 127), ("int4", 7)):
+        us_ref = _time(lambda: ref.quant_blocks_ref(x, qmax))
+        us_pal = _time(lambda: ops.quant_blocks(x, qmax, impl="pallas"))
+        emit(f"kernel/quant_blocks/{name}_nb1024_b128", us_pal,
+             f"jnp_ref_us={us_ref:.0f}")
+    d = jax.random.normal(key, (256, 128), jnp.float32) * 0.02
+    us_ref = _time(lambda: ref.topk_blocks_ref(d, 8))
+    us_pal = _time(lambda: ops.topk_blocks(d, 8, impl="pallas"))
+    emit("kernel/topk_blocks/k8_nb256_b128", us_pal,
+         f"jnp_ref_us={us_ref:.0f}")
+
     # gossip-merge winner selection (the anti-entropy sync hot spot): the
     # dense Pallas kernel and the degree-compressed lax path vs the dense
     # pure-lax oracle, on a k=4 overlay at R=64, cap=256

@@ -80,6 +80,12 @@ def main() -> None:
         # Already part of gossip_sync; same targeted-run rule.
         *([("attack_suite", lambda: gossip_propagation.run_fault_suite())]
           if args.only else []),
+        # wire compression: identity-codec bitwise equivalence + the
+        # accuracy-vs-bytes Pareto sweep (BENCH_gossip_sync.json
+        # "delta_codec"). Already part of gossip_sync; same targeted-run
+        # rule.
+        *([("delta_codec", lambda: gossip_propagation.run_delta_codec())]
+          if args.only else []),
         # demo: write a Perfetto trace + metrics JSONL from a small sim
         *([("obs_report", lambda: subprocess.check_call(
             [sys.executable, "scripts/obs_report.py", "--iterations", "10"]))]

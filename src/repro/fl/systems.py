@@ -383,6 +383,23 @@ class _GossipLedger:
         self.approvals_issued += int(
             sum(1 for r in rows if r >= 0 and not appr[r, node_id])
         )
+        # wire compression (repro.kernels.delta_codec): encode the commit
+        # against the slot's pre-overwrite content, store the DEQUANTIZED
+        # wire values (lossy error enters training exactly once, here) and
+        # digest the ENCODED pytree so the spoof defense verifies the bytes
+        # that actually cross the link. Identity codecs skip all of it —
+        # the PR-7 commit path, bitwise.
+        slot = self.seq % self.capacity
+        codec = (self.net.bank_cfg.codec
+                 if self.net.bank_cfg is not None else None)
+        if codec is not None and not codec.is_identity:
+            base = jax.tree_util.tree_map(lambda b: b[slot], self.net.bank)
+            enc = codec.encode(prepared.new_params, base)
+            prepared = prepared._replace(
+                new_params=codec.decode(enc, base)
+            )
+        else:
+            enc = prepared.new_params
         dag_i, bank = self._commit(
             dag_i, self.net.bank, node_id, jnp.float32(t1), prepared,
             jnp.int32(self.seq),
@@ -390,8 +407,7 @@ class _GossipLedger:
         self.net.write(node_id, dag_i, bank)
         # transport accounting: the committer holds its own payload's
         # chunks; the ring-reused slot's old content leaves everyone else
-        self.net.bank_commit(node_id, self.seq % self.capacity,
-                             prepared.new_params)
+        self.net.bank_commit(node_id, slot, enc)
         self.net.trace_host(t1, obs_trace.KIND_COMMIT, node_id, node_id,
                             float(self.seq))
         self.seq += 1

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.chunk_transfer import chunk_dedup, transfer_select
+from repro.kernels.delta_codec import DeltaCodec, quant_blocks, topk_blocks
 from repro.kernels.event_pop import event_pop
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
@@ -55,5 +56,5 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
 __all__ = [
     "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
     "gossip_winner", "gossip_winner_nbr", "chunk_dedup", "transfer_select",
-    "event_pop", "ref",
+    "event_pop", "DeltaCodec", "quant_blocks", "topk_blocks", "ref",
 ]

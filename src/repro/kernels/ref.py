@@ -124,6 +124,60 @@ def chunk_dedup_ref(
     ) > 0)
 
 
+def quant_blocks_ref(
+    x: jnp.ndarray,     # (nb, B) f32 — one codec block per row
+    qmax: int,          # 127 for int8, 7 for int4
+):
+    """Blocked symmetric quantization (oracle + CPU fast path).
+
+    Per block: ``scale = amax / qmax`` when the block has any signal and
+    exactly 1.0 on an all-zero block (so zero padding round-trips to zero
+    bit-exactly), then ``codes = clip(round(x / scale), -qmax, qmax)``.
+    The worst-case round-trip error is ``scale / 2`` per element —
+    ``amax / (2 * qmax)`` of that block, the bound
+    ``tests/test_delta_codec.py`` property-tests.
+
+    Returns ``(codes (nb, B) int8, scales (nb,) f32)``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax / qmax, 1.0)
+    codes = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return codes, scale[:, 0]
+
+
+def dequant_blocks_ref(
+    codes: jnp.ndarray,   # (nb, B) int8
+    scales: jnp.ndarray,  # (nb,) f32
+) -> jnp.ndarray:
+    """Inverse of ``quant_blocks_ref``: codes * per-block scale, in f32."""
+    return codes.astype(jnp.float32) * scales[:, None]
+
+
+def topk_blocks_ref(
+    d: jnp.ndarray,     # (nb, B) f32 — one delta block per row
+    k: int,
+) -> jnp.ndarray:
+    """Per-block top-k-|delta| masking (oracle + CPU fast path).
+
+    Element i survives iff fewer than ``k`` elements of its block rank
+    strictly ahead of it, where j ranks ahead of i when ``|d_j| > |d_i|``
+    or (``|d_j| == |d_i|`` and ``j < i``) — a deterministic dense
+    reduction (no sort, ties break toward the earlier index). Zeros never
+    outrank a nonzero, so ``k >= nnz(block)`` keeps every nonzero and the
+    masked delta IS the delta (the exactness property the tests pin).
+
+    Returns the dense masked delta, same shape as ``d``.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    a = jnp.abs(d)
+    idx = jnp.arange(d.shape[-1], dtype=jnp.int32)
+    gt = a[:, :, None] > a[:, None, :]                        # [n, j, i]
+    eq = (a[:, :, None] == a[:, None, :]) & (idx[:, None] < idx[None, :])
+    rank = jnp.sum((gt | eq).astype(jnp.int32), axis=1)       # (nb, B)
+    return jnp.where(rank < k, d, 0.0)
+
+
 def fedavg_ref(weights: jnp.ndarray, models: jnp.ndarray) -> jnp.ndarray:
     """Eq. (1): weighted average of k flattened models.
 

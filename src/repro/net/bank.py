@@ -55,6 +55,19 @@ a slot's *latest* content. A commit overwriting slot s resets every other
 node's presence bits for s (they held the old content) and re-digests it;
 a node still referencing the evicted row will re-fetch — and is gated on —
 the new content until merge overwrites the stale row.
+
+Wire compression (``BankGossipConfig.codec``,
+``repro.kernels.delta_codec``): with a codec configured the FL driver
+encodes every commit before it reaches the store — the store slot holds
+the DEQUANTIZED wire values (so quantization error flows into training
+exactly once, at commit), ``commit_chunks`` digests the ENCODED pytree
+(the spoof defense verifies the bytes that actually cross the link), and
+the engines scale ``chunk_bytes`` by ``codec.wire_ratio()`` so pricing,
+the ``sent`` meter, and the event engine's drain instants all charge
+encoded bytes. ``codec=None`` and the explicit identity codec keep every
+jitted program LITERALLY the uncompressed one (``delta_codec.codec_key``),
+the same contract the obs/faults static keys honor; pinned bitwise in
+``tests/test_delta_codec.py``, formats in ``docs/WIRE_FORMAT.md``.
 """
 from __future__ import annotations
 
@@ -66,6 +79,7 @@ import jax.numpy as jnp
 
 from repro.core.dag import DagState
 from repro.kernels import chunk_transfer as ck
+from repro.kernels import delta_codec as codec_lib
 
 
 @dataclass(frozen=True)
@@ -78,11 +92,15 @@ class BankGossipConfig:
     so a bench-scale CNN is charged like the paper's model.
     ``impl`` — dedup reduction backend ("pallas" / "lax"; None auto-picks
     like ``kernels.chunk_transfer.chunk_dedup``).
+    ``codec`` — wire compression for commits
+    (``repro.kernels.delta_codec.DeltaCodec``); None ships raw f32 chunks
+    and keeps the engines' jitted programs literally unchanged.
     """
 
     chunks_per_slot: int = 4
     slot_bytes: Optional[float] = None
     impl: Optional[str] = None
+    codec: Optional["codec_lib.DeltaCodec"] = None
 
 
 class BankState(NamedTuple):
@@ -157,7 +175,10 @@ def commit_chunks(have: jnp.ndarray, digest: jnp.ndarray, params: Any,
 
     The committer holds the new content; everyone else's presence bits for
     the slot are reset (they held the ring-evicted payload); the digest row
-    is re-derived from the new bytes. Returns ``(have, digest)``.
+    is re-derived from the new bytes. ``params`` is only ever digested
+    here, so a codec-enabled driver passes the ENCODED wire pytree — the
+    digest table then addresses the bytes receivers actually pull.
+    Returns ``(have, digest)``.
     """
     chunks = digest.shape[1]
     have = have.at[:, slot, :].set(False).at[node_id, slot, :].set(True)

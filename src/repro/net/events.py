@@ -324,7 +324,8 @@ def _advance_events_jit(impl: str, obs=None, faults=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None):
+def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
+                             codec=None):
     """Event-driven ``advance`` with the model bank gossiped.
 
     The row half of a batch is the shared ``_deliver_round`` (fire caps and
@@ -341,12 +342,16 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None):
     bank batches additionally sample chunk lag / byte totals and record a
     DRAIN trace span per link that moved payload. ``faults`` swaps in the
     fault-injected body (``faults=None`` keeps the untouched program
-    below).
+    below). ``codec`` (pre-mapped through ``delta_codec.codec_key``)
+    scales ``chunk_bytes`` to the encoded wire size — pricing, the byte
+    meter, AND the drain-instant arithmetic all see the compressed
+    granule, so compressed chunks complete earlier in continuous time;
+    ``codec=None`` keeps the literal raw-chunk program.
     """
     if faults is not None:
         from repro.net import faults as faults_lib
         return faults_lib._advance_events_bank_faults_jit(
-            impl, bank_impl, faults, obs
+            impl, bank_impl, faults, obs, codec
         )
 
     if obs is not None:
@@ -356,6 +361,8 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None):
                 qkind, qsrc, qdst, qseq, islot, key, horizon, limit,
                 fire_cap, part_mask, part_t0, part_t1, drop, nbr_idx,
                 nbr_valid, bw_bytes, chunk_bytes, *obs_carry):
+        if codec is not None:
+            chunk_bytes = chunk_bytes * codec.wire_ratio()
         n = dags.publisher.shape[0]
 
         def cond(carry):

@@ -479,16 +479,21 @@ def _converge_faults_jit(impl: str, faults: FaultConfig, obs=None):
 
 @functools.lru_cache(maxsize=None)
 def _advance_bank_faults_jit(impl: str, bank_impl, faults: FaultConfig,
-                             obs=None):
+                             obs=None, codec=None):
     """Faulted ``_advance_bank_jit``: rows merge over the faulted edge
     mask, then the fault-aware chunk service (spoofing, verification,
     back-off, quarantine) replaces ``chunk_step`` with the ``FaultState``
-    threaded through the scan carry."""
+    threaded through the scan carry. ``codec`` (pre-mapped through
+    ``delta_codec.codec_key``) prices chunks at encoded bytes — the
+    attacker's rejected transfers are billed the COMPRESSED size too;
+    ``codec=None`` keeps the literal raw-chunk program."""
     masks = _role_masks(faults)
     tick_body = _faulted_tick(impl, faults, masks)
 
     def serviced(dags, bstate, fstate, digest, edges, sub, cap_bytes,
                  chunk_bytes):
+        if codec is not None:
+            chunk_bytes = chunk_bytes * codec.wire_ratio()
         return _fault_chunk_service(
             dags, bstate, fstate, digest, edges, cap_bytes, chunk_bytes,
             jax.random.fold_in(sub, _SALT_SPOOF), faults, masks, bank_impl,
@@ -559,18 +564,21 @@ def _advance_bank_faults_jit(impl: str, bank_impl, faults: FaultConfig,
 
 @functools.lru_cache(maxsize=None)
 def _converge_bank_faults_jit(impl: str, bank_impl, faults: FaultConfig,
-                              obs=None):
+                              obs=None, codec=None):
     """Faulted ``_converge_bank_jit``. The stall check watches the
     ``FaultState`` too: rejections accruing toward quarantine are progress
     (the back-off/re-route cycle is still converging); once a spoofed
     stripe has re-routed and nothing moves for a full stride cycle the
     flush exits — ``synced`` is then honest about whether every referenced
-    chunk VERIFIED, not merely arrived."""
+    chunk VERIFIED, not merely arrived. ``codec`` prices chunks at encoded
+    bytes (``codec=None`` keeps the literal raw-chunk program)."""
     masks = _role_masks(faults)
     tick_body = _faulted_tick(impl, faults, masks)
 
     def serviced(dags, bstate, fstate, digest, edges, sub, cap_bytes,
                  chunk_bytes):
+        if codec is not None:
+            chunk_bytes = chunk_bytes * codec.wire_ratio()
         return _fault_chunk_service(
             dags, bstate, fstate, digest, edges, cap_bytes, chunk_bytes,
             jax.random.fold_in(sub, _SALT_SPOOF), faults, masks, bank_impl,
@@ -786,7 +794,8 @@ def _advance_events_faults_jit(impl: str, faults: FaultConfig, obs=None):
 
 @functools.lru_cache(maxsize=None)
 def _advance_events_bank_faults_jit(impl: str, bank_impl,
-                                    faults: FaultConfig, obs=None):
+                                    faults: FaultConfig, obs=None,
+                                    codec=None):
     """Faulted ``events._advance_events_bank_jit``.
 
     Batch structure, continuous budget accrual, and drain re-arm are the
@@ -807,6 +816,8 @@ def _advance_events_bank_faults_jit(impl: str, bank_impl,
                 qvalid, qkind, qsrc, qdst, qseq, islot, key, horizon, limit,
                 fire_cap, part_mask, part_t0, part_t1, drop, nbr_idx,
                 nbr_valid, bw_bytes, chunk_bytes, *obs_carry):
+        if codec is not None:
+            chunk_bytes = chunk_bytes * codec.wire_ratio()
         n = dags.publisher.shape[0]
 
         def cond(carry):

@@ -66,7 +66,10 @@ unlimited capacity the whole trajectory is bitwise the ``bank_cfg=None``
 path (the CI-enforced equivalence); ``converge()`` then also waits for
 referenced chunks to arrive, with its tick bound extended by the slowest
 link's slot-drain time. ``bank_cfg=None`` (default) is exactly the PR-3
-driver.
+driver. With ``bank_cfg.codec`` set (``repro.kernels.delta_codec``),
+chunks are priced at their ENCODED byte size — the codec rides the jit
+factories as another static key, and every ratio-1.0 codec maps to the
+literal uncompressed program (``docs/WIRE_FORMAT.md``).
 
 Continuous time: constructed with ``GossipConfig(engine="events")``,
 ``advance`` runs the ``repro.net.events`` engine instead of the tick scan —
@@ -101,6 +104,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import dag as dag_lib
 from repro.core.dag import DagState
 from repro.kernels import chunk_transfer as chunk_kernel
+from repro.kernels import delta_codec as codec_lib
 from repro.kernels import gossip_merge as gossip_kernel
 from repro.net import bank as bank_lib
 from repro.net import mesh as mesh_lib
@@ -436,8 +440,27 @@ def _bank_tick_for(impl: str, bank_impl, mesh):
     return run
 
 
+def _codec_tick(tick, codec):
+    """Wrap a bank tick body so every consumer of ``chunk_bytes`` — credit
+    pricing, the ``sent`` meter, afford — is charged the codec's ENCODED
+    byte size. ``codec=None`` (the ``delta_codec.codec_key`` image of every
+    ratio-1.0 codec) returns the tick body UNTOUCHED, so the identity path
+    stays the literal uncompressed program."""
+    if codec is None:
+        return tick
+    ratio = codec.wire_ratio()
+
+    def run(dags, bstate, digest, edges, nbr_idx, nbr_valid, cap_bytes,
+            chunk_bytes):
+        return tick(dags, bstate, digest, edges, nbr_idx, nbr_valid,
+                    cap_bytes, chunk_bytes * ratio)
+
+    return run
+
+
 @functools.lru_cache(maxsize=None)
-def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
+def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None,
+                      codec=None):
     """Tick-batched advance with the bank gossiped: the same ONE-``lax.scan``
     window as ``_advance_jit`` — same PRNG splits, same edge samples — with
     the transport state threaded through the carry. ``obs`` threads the
@@ -445,11 +468,15 @@ def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
     bank run additionally samples chunk lag / byte totals and records a
     DRAIN trace span per link that moved payload. ``faults`` (a
     ``repro.net.faults.FaultConfig``) swaps in the fault-injected body —
-    ``faults=None`` keeps the untouched program below."""
+    ``faults=None`` keeps the untouched program below. ``codec`` (pre-mapped
+    through ``delta_codec.codec_key``) scales ``chunk_bytes`` to the
+    encoded wire size inside the body; ``codec=None`` keeps the literal
+    raw-chunk program."""
     if faults is not None:
         from repro.net import faults as faults_lib   # deferred: faults imports this module
-        return faults_lib._advance_bank_faults_jit(impl, bank_impl, faults, obs)
-    tick = _bank_tick_for(impl, bank_impl, mesh)
+        return faults_lib._advance_bank_faults_jit(impl, bank_impl, faults,
+                                                   obs, codec)
+    tick = _codec_tick(_bank_tick_for(impl, bank_impl, mesh), codec)
 
     if obs is None:
         def advance(dags, bstate, digest, key, ticks, part_active, adj, drop,
@@ -502,7 +529,8 @@ def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
 
 
 @functools.lru_cache(maxsize=None)
-def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
+def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None,
+                       codec=None):
     """Fixpoint flush with the bank gossiped: one ``lax.while_loop`` whose
     predicate also demands every replica's referenced chunks have ARRIVED —
     rows synced is no longer enough when payloads lag — and whose stall
@@ -510,11 +538,13 @@ def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None):
     is progress; a full stride cycle with nothing moving is a fixpoint).
     ``obs`` threads the telemetry carry (``obs=None`` keeps the untouched
     program); ``faults`` swaps in the fault-injected body (``faults=None``
-    keeps the untouched program below)."""
+    keeps the untouched program below); ``codec`` prices chunks at encoded
+    bytes (``codec=None`` keeps the literal raw-chunk program)."""
     if faults is not None:
         from repro.net import faults as faults_lib
-        return faults_lib._converge_bank_faults_jit(impl, bank_impl, faults, obs)
-    tick = _bank_tick_for(impl, bank_impl, mesh)
+        return faults_lib._converge_bank_faults_jit(impl, bank_impl, faults,
+                                                    obs, codec)
+    tick = _codec_tick(_bank_tick_for(impl, bank_impl, mesh), codec)
 
     def synced(dags, bstate, digest):
         return replica_lib.replicas_synced(dags) & (
@@ -845,6 +875,10 @@ class GossipNetwork:
             slot_b = (bank_lib.slot_nbytes(bank) if bank_cfg.slot_bytes is None
                       else float(bank_cfg.slot_bytes))
             self._chunk_bytes = jnp.float32(max(slot_b / c, 1e-9))
+            # the static codec key for the bank jit factories: None for
+            # every codec that prices like raw bytes, so the identity
+            # path keeps the literal uncompressed programs
+            self._codec = codec_lib.codec_key(bank_cfg.codec)
             self._digest = jax.jit(
                 bank_lib.bank_digests, static_argnames="chunks"
             )(bank, chunks=c)
@@ -1078,6 +1112,7 @@ class GossipNetwork:
             "chunk_lag": np.asarray(m.chunk_lag, np.int64)[:taken],
             "bytes_total": np.asarray(m.bytes_total, np.float64)[:taken],
             "staleness_node": np.asarray(m.staleness_node, np.int64)[:taken],
+            "staleness_link": np.asarray(m.staleness_link, np.int64)[:taken],
             "rejected": np.asarray(m.rejected, np.int64)[:taken],
             "quarantined": np.asarray(m.quarantined, np.int64)[:taken],
         }
@@ -1202,7 +1237,7 @@ class GossipNetwork:
         if self.bank_cfg is not None:
             fn = _advance_bank_jit(
                 self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg,
-                fl,
+                fl, self._codec,
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,
@@ -1284,7 +1319,8 @@ class GossipNetwork:
         fl = self.faults_cfg
         if self.bank_cfg is not None:
             fn = events_lib._advance_events_bank_jit(
-                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg, fl
+                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg, fl,
+                self._codec,
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state.have,
@@ -1401,7 +1437,7 @@ class GossipNetwork:
             )
             fn = _converge_bank_jit(
                 self.cfg.impl, self.bank_cfg.impl, self.mesh, self.obs_cfg,
-                fl,
+                fl, self._codec,
             )
             args = (
                 self.replicas.dags, self.replicas.bank_state, self._digest,

@@ -167,6 +167,28 @@ def missing_vs_union(dags: DagState, union: DagState = None) -> jnp.ndarray:
     return jnp.sum((~have).astype(jnp.int32), axis=-1)
 
 
+def missing_vs_peer(dags: DagState) -> jnp.ndarray:
+    """(R, R) rows receiver i has not yet seen of what sender j holds.
+
+    The pairwise form of ``missing_vs_union``: entry (i, j) counts the
+    occupied rows of replica j whose identity (publisher, publish_time)
+    replica i does not hold at the same global slot — how far i lags j
+    specifically, not just the union. The diagonal is zero, a column is
+    what the overlay still owes everyone from node j's view, and a row
+    pinned high while the rest of its column drains is a receiver being
+    starved (eclipse / partition / dead link) — the per-link series
+    ``repro.obs`` samples (``staleness_link``). Rows are positionally
+    aligned across replicas (``replica.global_row``), the same property
+    ``missing_vs_union`` leans on.
+    """
+    p, t = dags.publisher, dags.publish_time
+    have = (p[:, None, :] == p[None, :, :]) & (
+        t[:, None, :] == t[None, :, :]
+    )
+    have = have | (p[None, :, :] < 0)
+    return jnp.sum((~have).astype(jnp.int32), axis=-1)
+
+
 def replicas_synced(dags: DagState) -> jnp.ndarray:
     """() bool — every replica leaf-identical to replica 0."""
     flags = [

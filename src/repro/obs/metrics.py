@@ -39,6 +39,13 @@ Series (fixed capacity S, one row per round/batch; overflow increments
                    ``staleness`` max — who is lagging, not just how far
                    (an eclipsed or crashed node shows up here long before
                    the max does on a busy overlay);
+  ``staleness_link`` (S, N, N) the PER-LINK lag matrix
+                   (``replica.missing_vs_peer``): entry (i, j) is the
+                   occupied rows receiver i still lacks of sender j's
+                   view — which SIDE of the overlay owes which rows
+                   (``staleness_node`` is its row-wise view vs the union;
+                   a starved receiver is a pinned row here long before
+                   it dominates the max);
   ``rejected``     cumulative digest-verification rejections
                    (``repro.net.faults``; 0 without fault injection);
   ``quarantined``  directed links currently quarantined by the rejection
@@ -97,6 +104,7 @@ class MetricsState(NamedTuple):
     chunk_lag: jnp.ndarray    # (S,) i32 max referenced-but-missing chunks
     bytes_total: jnp.ndarray  # (S,) f32 cumulative payload bytes
     staleness_node: jnp.ndarray  # (S, N) i32 per-node row lag behind union
+    staleness_link: jnp.ndarray  # (S, N, N) i32 rows receiver i lacks of j
     rejected: jnp.ndarray     # (S,) i32 cumulative digest rejections
     quarantined: jnp.ndarray  # (S,) i32 quarantined directed links
 
@@ -116,6 +124,7 @@ def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
         chunk_lag=jnp.zeros((s,), jnp.int32),
         bytes_total=jnp.zeros((s,), jnp.float32),
         staleness_node=jnp.zeros((s, num_nodes), jnp.int32),
+        staleness_link=jnp.zeros((s, num_nodes, num_nodes), jnp.int32),
         rejected=jnp.zeros((s,), jnp.int32),
         quarantined=jnp.zeros((s,), jnp.int32),
     )
@@ -161,6 +170,7 @@ def update(
     union = replica_lib.merge_all(dags)
     tips = dag_lib.num_tips(union, t, cfg.tau_max)
     stale_node = replica_lib.missing_vs_union(dags, union)
+    stale_link = replica_lib.missing_vs_peer(dags)
     stale = jnp.max(stale_node)
     if rejects is not None:
         rejected = jnp.sum(rejects)
@@ -200,6 +210,9 @@ def update(
         bytes_total=m.bytes_total.at[slot].set(total, mode="drop"),
         staleness_node=m.staleness_node.at[slot].set(
             stale_node.astype(jnp.int32), mode="drop"
+        ),
+        staleness_link=m.staleness_link.at[slot].set(
+            stale_link.astype(jnp.int32), mode="drop"
         ),
         rejected=m.rejected.at[slot].set(
             rejected.astype(jnp.int32), mode="drop"

@@ -1,0 +1,339 @@
+"""Wire compression for bank commits (`repro.kernels.delta_codec`).
+
+Pins the acceptance invariants of the codec layer:
+
+* ROUND-TRIP BOUND: blocked symmetric quantization reconstructs every
+  element to within half a quantization step — ``amax(block) / (2 *
+  qmax)`` per block — property-tested per dtype; all-zero blocks (and
+  therefore the padding ``_to_blocks`` appends) round-trip EXACTLY;
+* TOP-K EXACTNESS: with ``k >= nnz(block)`` the masked delta IS the
+  delta — sparsification only ever drops the smallest-|d| surplus, and
+  ties break deterministically toward the earlier index;
+* KERNEL == ORACLE: the Pallas kernels agree with the pure-lax refs —
+  codes and masks exactly, scales to float rounding (the jitted kernel
+  may compile ``x / scale`` as a reciprocal multiply);
+* IDENTITY IS LITERAL: ``DeltaCodec(kind="none")`` (and ``codec=None``)
+  runs the engines' uncompressed programs bitwise — final replicas,
+  bank state, and PRNG key — over engines x overlays x faults on/off;
+* PRICING: an active codec scales every byte the meter records by
+  exactly ``wire_ratio()`` when both runs move the same chunks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dag as dag_lib
+from repro.kernels import ref
+from repro.kernels.delta_codec import (BLOCK, DeltaCodec, _to_blocks,
+                                       codec_key, quant_blocks,
+                                       quant_blocks_pallas, topk_blocks,
+                                       topk_blocks_pallas)
+from repro.net import faults as faults_lib
+from repro.net import gossip as gossip_lib
+from repro.net import replica as replica_lib
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.faults import FaultConfig
+
+CAP, K = 32, 2
+BANK = BankGossipConfig(chunks_per_slot=4)
+
+
+def genesis(num_nodes):
+    d = dag_lib.empty_dag(CAP, K, num_nodes + 1)
+    return dag_lib.publish(
+        d, jnp.asarray(num_nodes, jnp.int32), jnp.float32(0.0),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(0, jnp.int32),
+    )
+
+
+def make_net(top, engine="ticks", bank_cfg=BANK, faults=None, seed=7):
+    return gossip_lib.GossipNetwork(
+        genesis(top.num_nodes), bank=jnp.zeros((CAP, 8)), top=top,
+        cfg=gossip_lib.GossipConfig(sync_period=1.0, seed=seed,
+                                    engine=engine),
+        bank_cfg=bank_cfg, faults_cfg=faults,
+    )
+
+
+def publish_on(net, node, seq, t):
+    d = replica_lib.publish_local(
+        net.read(node), seq, jnp.asarray(node, jnp.int32), jnp.float32(t),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(seq % CAP, jnp.int32),
+    )
+    net.write(node, d)
+    if net.bank_cfg is not None:
+        net.bank_commit(node, seq % CAP, jnp.full((8,), float(seq)))
+
+
+def assert_nets_bitwise(a, b, msg=""):
+    for name in dag_lib.DagState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.replicas.dags, name)),
+            np.asarray(getattr(b.replicas.dags, name)),
+            err_msg=f"{msg}{name}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(a._key), np.asarray(b._key), err_msg=f"{msg}key"
+    )
+    if a.bank_cfg is not None:
+        for f in ("have", "credit", "sent"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.replicas.bank_state, f)),
+                np.asarray(getattr(b.replicas.bank_state, f)),
+                err_msg=f"{msg}{f}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Round-trip error bound per dtype
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 700),
+    kind=st.sampled_from(["int8", "int4"]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_property_quant_roundtrip_error_bound(seed, n, kind, scale):
+    """Property (acceptance): dequant(quant(x)) is within half a step —
+    ``amax(block) / (2 * qmax)`` — of x, elementwise, for any length
+    (padding included) and magnitude."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    codec = DeltaCodec(kind=kind, impl="lax")
+    base = jnp.zeros((n,), jnp.float32)
+    enc = codec.encode(x, base)
+    out = np.asarray(codec.decode(enc, base))
+    qmax = 127 if kind == "int8" else 7
+    blocks = np.asarray(_to_blocks(jnp.asarray(x), codec.block))
+    step = np.abs(blocks).max(axis=-1) / (2.0 * qmax)
+    bound = np.repeat(step, codec.block)[:n] + 1e-6 * scale
+    np.testing.assert_array_less(np.abs(out - x), bound + 1e-12)
+
+
+@pytest.mark.parametrize("kind", ["int8", "int4"])
+def test_quant_zero_blocks_roundtrip_exactly(kind):
+    """All-zero blocks get scale exactly 1.0 and codes 0 — the property
+    that makes ``_to_blocks`` padding invisible after decode."""
+    codec = DeltaCodec(kind=kind, impl="lax")
+    x = jnp.zeros((5, 3), jnp.float32)
+    out = codec.decode(codec.encode(x, x), x)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    codes, scales = ref.quant_blocks_ref(jnp.zeros((4, BLOCK)), 127)
+    np.testing.assert_array_equal(np.asarray(scales), 1.0)
+    np.testing.assert_array_equal(np.asarray(codes), 0)
+
+
+# ---------------------------------------------------------------------------
+# Top-k exactness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nnz=st.integers(0, 8))
+def test_property_topk_exact_when_k_covers_nnz(seed, nnz):
+    """Property (acceptance): zeros never outrank a nonzero, so any block
+    with ``nnz <= k`` survives masking bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    d = np.zeros((3, BLOCK), np.float32)
+    for r in range(d.shape[0]):
+        idx = rng.choice(BLOCK, size=nnz, replace=False)
+        d[r, idx] = rng.standard_normal(nnz).astype(np.float32)
+    out = np.asarray(ref.topk_blocks_ref(jnp.asarray(d), max(nnz, 1)))
+    np.testing.assert_array_equal(out, d)
+
+
+def test_topk_keeps_largest_and_breaks_ties_low_index():
+    d = jnp.asarray([[0.5, -2.0, 1.0, 1.0, 0.1, 0.0, 0.0, 0.0]], jnp.float32)
+    out = np.asarray(ref.topk_blocks_ref(d, 2))
+    np.testing.assert_array_equal(
+        out, [[0.0, -2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]]
+    )
+    codec = DeltaCodec(kind="topk", impl="lax")
+    assert codec.topk_k() == 8            # 0.0625 * 128
+    assert codec.wire_ratio() == pytest.approx(0.125)
+
+
+def test_topk_codec_roundtrip_applies_masked_delta():
+    rng = np.random.default_rng(0)
+    base = jnp.asarray(rng.standard_normal(300), jnp.float32)
+    new = base + jnp.asarray(rng.standard_normal(300) * 0.01, jnp.float32)
+    codec = DeltaCodec(kind="topk", topk_frac=1.0, impl="lax")
+    out = np.asarray(codec.decode(codec.encode(new, base), base))
+    np.testing.assert_allclose(out, np.asarray(new), rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel == oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nb=st.integers(1, 33),
+    qmax=st.sampled_from([127, 7]),
+)
+def test_property_quant_kernel_matches_oracle(seed, nb, qmax):
+    """Codes exactly; scales to float rounding (the jitted kernel may
+    compile the division as a reciprocal multiply)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((nb, BLOCK)), jnp.float32)
+    ck, sk = quant_blocks_pallas(x, qmax, interpret=True)
+    cr, sr = ref.quant_blocks_ref(x, qmax)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    assert ck.dtype == jnp.int8
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nb=st.integers(1, 17),
+       k=st.integers(1, 128))
+def test_property_topk_kernel_matches_oracle(seed, nb, k):
+    rng = np.random.default_rng(seed)
+    d = jnp.asarray(rng.standard_normal((nb, BLOCK)), jnp.float32)
+    out_k = topk_blocks_pallas(d, k, interpret=True)
+    out_r = ref.topk_blocks_ref(d, k)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_dispatchers_follow_backend_rule():
+    x = jnp.ones((2, BLOCK), jnp.float32)
+    for impl in (None, "lax", "pallas"):
+        c, s = quant_blocks(x, 127, impl=impl)
+        assert c.shape == (2, BLOCK) and s.shape == (2,)
+        assert topk_blocks(x, 4, impl=impl).shape == (2, BLOCK)
+    with pytest.raises(ValueError, match="impl"):
+        quant_blocks(x, 127, impl="cuda")
+    with pytest.raises(ValueError, match="impl"):
+        topk_blocks(x, 4, impl="cuda")
+    with pytest.raises(ValueError, match="kind"):
+        DeltaCodec(kind="zstd")
+
+
+# ---------------------------------------------------------------------------
+# Identity is literal: kind="none" is bitwise the codec=None program
+# ---------------------------------------------------------------------------
+
+
+def test_codec_key_maps_identity_to_none():
+    assert codec_key(None) is None
+    assert codec_key(DeltaCodec(kind="none")) is None
+    assert codec_key(DeltaCodec(kind="topk", topk_frac=1.0)) is None
+    active = DeltaCodec(kind="int8")
+    assert codec_key(active) is active
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+def test_identity_codec_bitwise_uncompressed_unit(engine):
+    top = topo.ring(6, link_latency=1.0, bandwidth=256.0, seed=3)
+    a = make_net(top, engine, bank_cfg=BankGossipConfig(chunks_per_slot=4))
+    b = make_net(top, engine, bank_cfg=BankGossipConfig(
+        chunks_per_slot=4, codec=DeltaCodec(kind="none")))
+    for seq, (node, t) in enumerate([(0, 0.2), (3, 0.4)], start=1):
+        publish_on(a, node, seq, t)
+        publish_on(b, node, seq, t)
+    for t in (1.0, 2.5, 6.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+    assert a.converge(at_time=30.0) == b.converge(at_time=30.0)
+    assert_nets_bitwise(a, b, msg="converge:")
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    overlay=st.sampled_from(["ring", "star", "full"]),
+    engine=st.sampled_from(["ticks", "events"]),
+    faulted=st.booleans(),
+)
+def test_property_identity_codec_bitwise_uncompressed(seed, overlay, engine,
+                                                      faulted):
+    """Property (acceptance): ``DeltaCodec(kind="none")`` keys the SAME
+    jitted programs as ``codec=None`` — bitwise over overlays, engines,
+    and with the fault layer armed (spoofers active, digests verified)."""
+    n = 6
+    builders = {
+        "ring": lambda: topo.ring(n, link_latency=1.0, seed=seed % 997),
+        "star": lambda: topo.star(n, link_latency=1.0),
+        "full": lambda: topo.full(n, link_latency=1.0),
+    }
+    faults = (
+        FaultConfig(
+            roles=(faults_lib.ROLE_SPOOF,) + (faults_lib.ROLE_HONEST,) * (n - 1),
+            spoof_rate=1.0, verify_digests=True, quarantine_after=2,
+        ) if faulted else None
+    )
+    top = builders[overlay]()
+    a = make_net(top, engine, bank_cfg=BankGossipConfig(chunks_per_slot=4),
+                 faults=faults, seed=seed % 1013)
+    b = make_net(top, engine,
+                 bank_cfg=BankGossipConfig(chunks_per_slot=4,
+                                           codec=DeltaCodec(kind="none")),
+                 faults=faults, seed=seed % 1013)
+    rng = np.random.default_rng(seed)
+    for seq in range(1, 4):
+        node = int(rng.integers(0, n))
+        publish_on(a, node, seq, 0.1 * seq)
+        publish_on(b, node, seq, 0.1 * seq)
+    for t in (1.0, 2.5, 5.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+
+
+# ---------------------------------------------------------------------------
+# Pricing: the byte meter scales by exactly wire_ratio
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["ticks", "events"])
+@pytest.mark.parametrize("kind", ["int8", "int4", "topk"])
+def test_active_codec_prices_bytes_at_wire_ratio(engine, kind):
+    """With capacity to move every needed chunk, the compressed run moves
+    the SAME chunks as the raw run and the meter records exactly
+    ``wire_ratio()`` times the bytes (afford/credit/sent all price the
+    encoded size)."""
+    codec = DeltaCodec(kind=kind)
+    top = topo.ring(4, link_latency=1.0, bandwidth=1e9, seed=3)
+    a = make_net(top, engine, bank_cfg=BankGossipConfig(chunks_per_slot=4))
+    b = make_net(top, engine,
+                 bank_cfg=BankGossipConfig(chunks_per_slot=4, codec=codec))
+    publish_on(a, 0, 1, 0.2)
+    publish_on(b, 0, 1, 0.2)
+    for t in (1.0, 2.0, 3.0):
+        a.advance(t)
+        b.advance(t)
+    sent_a = np.asarray(a.replicas.bank_state.sent)
+    sent_b = np.asarray(b.replicas.bank_state.sent)
+    assert sent_a.sum() > 0               # the raw run actually moved chunks
+    np.testing.assert_allclose(
+        sent_b, sent_a * codec.wire_ratio(), rtol=1e-6
+    )
+
+
+def test_commit_store_holds_dequantized_values():
+    """The shared store holds what a receiver would decode — quantization
+    error enters training exactly once, at commit, and every node reads
+    the same bytes (the single-shared-store fidelity rule)."""
+    codec = DeltaCodec(kind="int8", impl="lax")
+    params = jnp.asarray(np.random.default_rng(0).standard_normal(8),
+                         jnp.float32)
+    base = jnp.zeros((8,), jnp.float32)
+    enc = codec.encode(params, base)
+    stored = codec.decode(enc, base)
+    # idempotence: re-encoding the stored value reproduces the wire bytes
+    enc2 = codec.encode(stored, base)
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(enc)[0]),
+        np.asarray(jax.tree_util.tree_leaves(enc2)[0]),
+    )

@@ -286,6 +286,28 @@ def test_metrics_series_tracks_known_propagation():
     assert deliver.sum() == net.topology.adjacency.sum() * 3   # per round
 
 
+def test_staleness_link_series_pinpoints_the_lagging_pair():
+    """The per-link lag matrix names WHO owes WHOM: after node 0 publishes
+    on a 4-ring, the t=1 sample shows the far node (2) as the one receiver
+    still lacking the row from every holder — and the matrix collapses to
+    zero exactly when the overlay syncs. Diagonal is identically zero
+    (``replica.missing_vs_peer``)."""
+    net = make_net(topo.ring(4, link_latency=1.0), obs=ObsConfig())
+    publish_on(net, 0, 1, 0.1)
+    net.advance(2.0)
+    rep = net.obs_report()
+    link = rep.series["staleness_link"]
+    assert link.shape == (2, 4, 4)
+    np.testing.assert_array_equal(link[:, range(4), range(4)], 0)
+    # t=1: nodes 0,1,3 hold the row; receiver 2 lacks it vs each of them
+    np.testing.assert_array_equal(link[0, 2, [0, 1, 3]], 1)
+    np.testing.assert_array_equal(link[0, [0, 1, 3]], 0)
+    # t=2: fully synced, nobody owes anybody
+    np.testing.assert_array_equal(link[1], 0)
+    # consistency: lag vs the union is bounded by the worst per-peer lag
+    assert rep.series["staleness"][0] == link[0].max()
+
+
 def test_bank_metrics_reach_the_series():
     cfg = BankGossipConfig(chunks_per_slot=4)
     net = make_net(topo.ring(2, link_latency=1.0, bandwidth=64.0),
