@@ -26,8 +26,10 @@ path, an obs-instrumented run diverges from the obs-off path, the warmed
 obs collectors cost more than 10% wall time, an all-honest fault config
 diverges from the un-faulted path, a spoofed chunk survives digest
 verification into a gated view, the identity delta codec diverges from
-the uncompressed bank path, or a compressed codec falls below a 2x byte
-reduction on the constrained 1 Mbps class — the CI tripwires.
+the uncompressed bank path, a compressed codec falls below a 2x byte
+reduction on the constrained 1 Mbps class, the zero-rate serving config
+diverges from the serve-free path, or the ideal-wire serving arm serves
+zero requests — the CI tripwires.
 It also exports the last obs-on run as ``obs_sample.trace.json`` (the
 Perfetto-loadable artifact CI uploads).
 """
@@ -757,8 +759,12 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     """Everything BENCH_gossip_sync.json carries: the fast-path grid, the
     sharded round, dispatch batching, the bank-gossip equivalence +
     bandwidth sweep, the event-engine equivalence + continuous-time rows,
-    the observability equivalence + overhead rows, and the attack-suite
-    equivalence + spoof-defense rows (no accuracy sweeps)."""
+    the observability equivalence + overhead rows, the attack-suite
+    equivalence + spoof-defense rows, and the serving-load zero-rate
+    equivalence + Table-I throughput/staleness rows (no accuracy
+    sweeps)."""
+    from benchmarks import serve_load as serve_load_bench
+
     own = record is None
     record = {} if own else record
     run_sync_round_grid(record=record)
@@ -769,6 +775,7 @@ def run_sync_bench(json_path: str = JSON_PATH, record: dict = None):
     run_event_engine(record=record)
     run_observability(record=record)
     run_fault_suite(record=record)
+    serve_load_bench.run_serve_load(record=record)
     if own:
         write_bench_json(record, json_path)
     return record
@@ -861,9 +868,11 @@ def smoke(json_path: str = JSON_PATH) -> int:
     path, a spoofed chunk that survives digest verification into a
     gated view (attack_success != 0 / zero rejections), an identity
     delta codec (``DeltaCodec(kind="none")``) that is no longer bitwise
-    the ``codec=None`` bank path (engines x faults), or a compressed
+    the ``codec=None`` bank path (engines x faults), a compressed
     codec whose measured byte reduction drops below 2x on the
-    constrained 1 Mbps class.
+    constrained 1 Mbps class, a zero-rate serving config that is no
+    longer bitwise the serve-free path, or an ideal-wire serving arm
+    that serves zero requests.
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -886,6 +895,11 @@ def smoke(json_path: str = JSON_PATH) -> int:
     obs_rows = run_observability(n=6, iterations=10, record=record)
     fault_rows = run_fault_suite(
         n=6, iterations=8, engines=("ticks",), record=record,
+    )
+    from benchmarks import serve_load as serve_load_bench
+    serve_rows = serve_load_bench.run_serve_load(
+        n=6, iterations=8, link_classes=("ideal", "lte_10mbps"),
+        record=record,
     )
     write_bench_json(record, json_path)
     ok = True
@@ -964,6 +978,29 @@ def smoke(json_path: str = JSON_PATH) -> int:
                 ok = False
     if not any(r["kind"] == "spoof_defense" for r in fault_rows):
         print("# SMOKE FAIL: no spoof-defense rows recorded")
+        ok = False
+    for row in serve_rows:
+        if row["kind"] == "zero_rate" and not row["bitwise_equal_unserved"]:
+            print(f"# SMOKE FAIL: zero-rate serving diverged from the "
+                  f"serve-free path: {row}")
+            ok = False
+        if (row["kind"] == "load" and row["link_class"] == "ideal"
+                and row["served_total"] == 0):
+            print(f"# SMOKE FAIL: ideal-wire serving arm served zero "
+                  f"requests — the Poisson load never fired: {row}")
+            ok = False
+        if (row["kind"] == "load"
+                and not row.get("arrivals_match_replay", True)):
+            print(f"# SMOKE FAIL: engine arrivals diverged from the host "
+                  f"Poisson replay — events were truncated or the serve "
+                  f"key branch drifted: {row}")
+            ok = False
+    if not any(r["kind"] == "zero_rate" for r in serve_rows):
+        print("# SMOKE FAIL: no zero-rate serve rows recorded")
+        ok = False
+    if not any(r["kind"] == "load" and r["link_class"] == "ideal"
+               for r in serve_rows):
+        print("# SMOKE FAIL: no ideal-wire serve rows recorded")
         ok = False
     print(f"# smoke {'ok' if ok else 'FAILED'}")
     return 0 if ok else 1

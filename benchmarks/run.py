@@ -22,6 +22,7 @@ from benchmarks import (
     gossip_propagation,
     kernel_bench,
     roofline_table,
+    serve_load,
     stability_tips,
     table2_iteration_delay,
     table3_attack_success,
@@ -85,6 +86,13 @@ def main() -> None:
         # "delta_codec"). Already part of gossip_sync; same targeted-run
         # rule.
         *([("delta_codec", lambda: gossip_propagation.run_delta_codec())]
+          if args.only else []),
+        # Poisson inference load on the event engine: zero-rate bitwise
+        # equivalence + requests/s and staleness-at-serve percentiles
+        # across Table-I link classes and a partition arm
+        # (BENCH_gossip_sync.json "serve_load"). Already part of
+        # gossip_sync; same targeted-run rule.
+        *([("serve_load", lambda: serve_load.run_serve_load())]
           if args.only else []),
         # demo: write a Perfetto trace + metrics JSONL from a small sim
         *([("obs_report", lambda: subprocess.check_call(

@@ -1,0 +1,121 @@
+"""Train AND serve: Poisson inference load on the gossiped model bank.
+
+    python examples/serve_under_gossip.py [--nodes 8] [--rate 2.0]
+
+The paper's deployment story (§III) is that devices keep answering
+inference requests from their local model while DAG consensus proceeds
+asynchronously. With ``run_dagfl_gossip(serve=ServeConfig(...))`` on the
+continuous-time event engine, every node receives its own Poisson
+request stream and serves fixed-slot batches from its
+availability-gated bank view — a request sees only rows whose model
+chunks have physically arrived over the node's links.
+
+This walkthrough runs the same training sim over three Table-I link
+classes with the paper's phi = 7 MB payload and shows the decoupling
+the serving layer makes measurable: throughput stays pinned to the
+offered rate on every class (serving reads the local view, it never
+waits on the wire), while staleness-at-serve — union rows the serving
+node was missing at each batch admit — grows as links shrink. A final
+arm splits the overlay mid-run and shows the partition paid for in
+served-model lag, not in dropped requests.
+"""
+import argparse
+
+import numpy as np
+
+from repro.fl.experiments import default_dagfl_config, make_cnn_setup
+from repro.fl.systems import SimConfig, run_dagfl_gossip
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.gossip import GossipConfig, PartitionSchedule
+from repro.net.serve import ServeConfig
+
+
+def run_one(args, bandwidth, partition=None, slot_bytes=7e6):
+    n = args.nodes
+    dcfg = default_dagfl_config(num_nodes=n)
+    sim = SimConfig(iterations=args.iterations,
+                    eval_every=max(args.iterations // 4, 1), seed=args.seed)
+    task, nodes, gval, _ = make_cnn_setup(num_nodes=n, seed=args.seed)
+    return run_dagfl_gossip(
+        task, nodes, dcfg, sim, gval,
+        topology=topo.ring(n, seed=args.seed, bandwidth=bandwidth),
+        # phi = 7 MB on a priced link generates thousands of drain events;
+        # headroom over the events-per-advance backstop so a saturated
+        # final advance can never strand late arrivals
+        gossip=GossipConfig(sync_period=1.0, seed=args.seed,
+                            max_events_per_advance=65536),
+        bank_gossip=BankGossipConfig(chunks_per_slot=4,
+                                     slot_bytes=slot_bytes),
+        engine="events", partition=partition,
+        serve=ServeConfig(rate=args.rate, slots=4, service_time=0.05),
+    )
+
+
+def show(tag, res):
+    rep = res.extras["serve_report"]
+    horizon = float(res.times[-1]) if len(res.times) else 1.0
+    def fmt(x):
+        return f"{x:6.2f}" if np.isfinite(x) else f"{'-':>6}"
+
+    print(f"{tag:>20} {rep['served_total']:>7d} "
+          f"{rep['served_total'] / max(horizon, 1e-9):>8.2f} "
+          f"{rep['dropped_total']:>8d} "
+          f"{fmt(rep['staleness_p50'])} {fmt(rep['staleness_p99'])} "
+          f"{rep['staleness_max']:>6d} {res.accs[-1]:>9.3f}")
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--iterations", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="Poisson requests per node per second")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"{args.nodes}-node ring, phi = 7 MB per model (Table I), "
+          f"{args.rate:g} req/s/node, 4-slot batches\n")
+    print(f"{'arm':>20} {'served':>7} {'req/s':>8} {'dropped':>8} "
+          f"{'p50':>6} {'p99':>6} {'max':>6} {'final acc':>9}")
+
+    for cls in ("ideal", "lte_10mbps", "constrained_1mbps"):
+        show(cls, run_one(args, topo.TABLE1_LINK_CLASSES[cls]))
+
+    print("\np50/p99/max = staleness-at-serve percentiles: union rows the "
+          "serving node was\nmissing from its availability-gated view at "
+          "each batch admit. Throughput holds\non every arm — requests "
+          "never wait on the wire — but the staleness tail prices\nwhat "
+          "the transport had not yet delivered.")
+
+    # A mid-run split, priced at a bench-scale 175 KB payload so chunks
+    # complete within the horizon (at phi = 7 MB the chunk backlog already
+    # saturates the gate and the split cannot make the view any staler),
+    # against its unpartitioned twin at the same scale.
+    print("\nlte_10mbps at a 175 KB payload, split halves for the middle "
+          "third vs healed:")
+    print(f"{'arm':>20} {'served':>7} {'req/s':>8} {'dropped':>8} "
+          f"{'p50':>6} {'p99':>6} {'max':>6} {'final acc':>9}")
+    part = PartitionSchedule(
+        assignment=topo.split_halves(args.nodes),
+        t_start=args.iterations / 3.0,
+        t_end=2.0 * args.iterations / 3.0,
+    )
+    bw = topo.TABLE1_LINK_CLASSES["lte_10mbps"]
+    show("healed", run_one(args, bw, slot_bytes=1.75e5))
+    rep = show("partitioned", run_one(args, bw, partition=part,
+                                      slot_bytes=1.75e5))
+
+    # the tail accrues across the window and drains after the heal
+    t = rep["staleness_t"]
+    s = rep["staleness_samples"]
+    late = t >= part.t_start
+    if late.any() and (~late).any():
+        print(f"\npartitioned arm: mean staleness {s[~late].mean():.2f} "
+              f"before the split vs {s[late].mean():.2f} from the split "
+              f"through the post-heal catch-up")
+
+
+if __name__ == "__main__":
+    main()

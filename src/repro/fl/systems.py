@@ -342,10 +342,11 @@ class _GossipLedger:
     name = "dagfl_gossip"
 
     def __init__(self, state, topology, gossip, partition, mesh=None,
-                 bank_gossip=None, obs=None, faults=None):
+                 bank_gossip=None, obs=None, faults=None, serve=None):
         self.net = gossip_lib.GossipNetwork(
             state.dag, state.bank, topology, gossip, partition, mesh=mesh,
             bank_cfg=bank_gossip, obs_cfg=obs, faults_cfg=faults,
+            serve_cfg=serve,
         )
         self.capacity = int(state.dag.publisher.shape[0])
         self.seq = int(state.dag.count)       # genesis consumed sequence 0
@@ -456,6 +457,11 @@ class _GossipLedger:
         if self.net.faults_cfg is not None:
             # adversary post-mortem: roles, rejections, quarantine, ASR
             out["fault_report"] = self.net.fault_report()
+        sr = self.net.serve_report()
+        if sr is not None:
+            # inference-load summary: per-node throughput counters plus
+            # staleness-at-serve percentiles (repro.net.serve.report)
+            out["serve_report"] = sr
         return out | {
             "replicas": self.net.replicas,
             "sync_rounds": self.net.rounds_run,
@@ -490,6 +496,7 @@ def run_dagfl_gossip(
     engine: Optional[str] = None,
     obs: Optional[ObsConfig] = None,
     faults=None,
+    serve=None,
 ) -> SimResult:
     """DAG-FL where each node runs Algorithm 2 against its own DAG replica.
 
@@ -538,6 +545,15 @@ def run_dagfl_gossip(
     ``faults=None`` (and an all-honest config) leaves every path bitwise
     what it was; adversarial runs surface ``extras["fault_report"]`` and
     fold rejection credit into tip selection (``fault_bias``).
+
+    ``serve`` (``repro.net.serve.ServeConfig``) adds per-node Poisson
+    inference load to the continuous-time engine: requests arrive at each
+    node, batch onto fixed slots, and are answered from the node's
+    availability-GATED view — so staleness-at-serve-time is the
+    transport's doing. ``serve=None`` and any ``rate<=0`` config leave
+    every path bitwise what it was (CI-enforced); serving runs surface
+    ``extras["serve_report"]`` (per-node throughput + staleness
+    percentiles). Requires ``engine="events"``.
     """
     if topology is None:
         topology = topo_lib.full(len(nodes))
@@ -549,7 +565,7 @@ def run_dagfl_gossip(
         task, nodes, dcfg, sim, global_val, weighted,
         lambda state, commit_fn: _GossipLedger(
             state, topology, gossip, partition, mesh=mesh,
-            bank_gossip=bank_gossip, obs=obs, faults=faults,
+            bank_gossip=bank_gossip, obs=obs, faults=faults, serve=serve,
         ),
     )
 

@@ -288,6 +288,19 @@ def gate_view(dag: DagState, have_row: jnp.ndarray, digest: jnp.ndarray) -> DagS
     )
 
 
+def gate_views(dags: DagState, sat: jnp.ndarray) -> DagState:
+    """All nodes' USABLE views at once: the stacked ``gate_view`` given a
+    precomputed availability reduction ``sat (R, S, C)`` (the serve path
+    already holds one from ``chunk_dedup`` — no re-reduction per node).
+    Rows whose payload has not arrived mask to empty exactly as in
+    ``gate_view``; with full availability this is the identity."""
+    avail = rows_available(dags, sat)
+    return dags._replace(
+        publisher=jnp.where(avail, dags.publisher, -1),
+        model_slot=jnp.where(avail, dags.model_slot, -1),
+    )
+
+
 def missing_chunks(dags: DagState, bstate: BankState,
                    digest: jnp.ndarray, impl: Optional[str] = None) -> jnp.ndarray:
     """(R,) int32 — referenced-but-unavailable chunks per node (0 = every

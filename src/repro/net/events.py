@@ -95,6 +95,9 @@ KIND_DELIVER = 0   # anti-entropy delivery on edge (src -> dst)
 KIND_DRAIN = 1     # bank chunk-drain completion on edge (src -> dst)
 KIND_PUBLISH = 2   # iteration completion: dst publishes its transaction
 KIND_START = 3     # iteration start: a node reserves tips, begins h_i work
+KIND_INFER = 4     # inference-serving slot on a node (arrival / completion);
+                   # sorts AFTER every transport kind at an equal instant, so
+                   # same-instant requests serve the post-merge view
 
 
 class EventQueue(NamedTuple):
@@ -236,7 +239,7 @@ def _deliver_round(dags, qt, fires, key, t, qv, qkind, qsrc, qdst, islot,
 
 
 @functools.lru_cache(maxsize=None)
-def _advance_events_jit(impl: str, obs=None, faults=None):
+def _advance_events_jit(impl: str, obs=None, faults=None, serve=None):
     """Event-driven ``advance``: one ``lax.while_loop`` over delivery batches.
 
     Each iteration pops the queue head (``repro.kernels.event_pop``),
@@ -253,8 +256,13 @@ def _advance_events_jit(impl: str, obs=None, faults=None):
     ``obs=None`` program, whose body below is the untouched code.
     ``faults`` (a ``repro.net.faults.FaultConfig``) swaps in the
     fault-injected body — ``faults=None`` keeps the untouched program
-    below.
+    below. ``serve`` (pre-mapped through ``repro.net.serve.serve_key``)
+    swaps in the inference-serving body with KIND_INFER slots live;
+    ``serve=None`` keeps the literal serve-free program below.
     """
+    if serve is not None:
+        from repro.net import serve as serve_lib   # deferred: serve imports this module
+        return serve_lib._advance_events_serve_jit(impl, serve, obs, faults)
     if faults is not None:
         from repro.net import faults as faults_lib   # deferred: faults imports this module
         return faults_lib._advance_events_faults_jit(impl, faults, obs)
@@ -325,7 +333,7 @@ def _advance_events_jit(impl: str, obs=None, faults=None):
 
 @functools.lru_cache(maxsize=None)
 def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
-                             codec=None):
+                             codec=None, serve=None):
     """Event-driven ``advance`` with the model bank gossiped.
 
     The row half of a batch is the shared ``_deliver_round`` (fire caps and
@@ -346,8 +354,17 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
     scales ``chunk_bytes`` to the encoded wire size — pricing, the byte
     meter, AND the drain-instant arithmetic all see the compressed
     granule, so compressed chunks complete earlier in continuous time;
-    ``codec=None`` keeps the literal raw-chunk program.
+    ``codec=None`` keeps the literal raw-chunk program. ``serve``
+    (pre-mapped through ``repro.net.serve.serve_key``) swaps in the
+    inference-serving body with KIND_INFER slots live — requests served
+    from the availability-GATED view; ``serve=None`` keeps the literal
+    serve-free program below.
     """
+    if serve is not None:
+        from repro.net import serve as serve_lib
+        return serve_lib._advance_events_bank_serve_jit(
+            impl, bank_impl, serve, obs, faults, codec
+        )
     if faults is not None:
         from repro.net import faults as faults_lib
         return faults_lib._advance_events_bank_faults_jit(
@@ -419,10 +436,20 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
             # bandwidth is never banked) — the accrual clock resets either way
             last_srv = jnp.where(sched, t, last_srv)
             # drain slots: serviced edges re-arm from `pending` at the next
-            # whole-chunk completion; suppressed fired drains retry later
+            # whole-chunk completion; suppressed fired drains retry later.
+            # Strict progress: f32 accrual residue can leave `credit` within
+            # one ulp-of-t's worth of bytes of a whole chunk, making the
+            # completion instant round back to t itself — the drain would
+            # re-arm at its own time and livelock the advance against
+            # max_events_per_advance, starving every event behind it. Clamp
+            # each re-arm to the next representable instant (a no-op for any
+            # re-arm that already lands strictly past t).
             rate = jnp.maximum(bw_bytes, 1e-9)
-            e_next = (t + (chunk_bytes - bstate.credit) / rate)[qdst, qsrc]
-            e_retry = (t + chunk_bytes / rate)[qdst, qsrc]
+            t_next = jnp.nextafter(t, jnp.float32(jnp.inf))
+            e_next = jnp.maximum(
+                t + (chunk_bytes - bstate.credit) / rate, t_next
+            )[qdst, qsrc]
+            e_retry = jnp.maximum(t + chunk_bytes / rate, t_next)[qdst, qsrc]
             e_svc = svc[qdst, qsrc]
             e_pend = pending[qdst, qsrc]
             qv = jnp.where(is_drn & e_svc, e_pend, qv)

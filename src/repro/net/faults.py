@@ -867,9 +867,15 @@ def _advance_events_bank_faults_jit(impl: str, bank_impl,
                 faults, masks, bank_impl,
             )
             last_srv = jnp.where(sched, t, last_srv)
+            # strict-progress clamp: see the serve-free drain re-arm in
+            # events.py — an f32 credit residue can round the completion
+            # instant back to t and livelock the advance
             rate = jnp.maximum(bw_bytes, 1e-9)
-            e_next = (t + (chunk_bytes - bstate.credit) / rate)[qdst, qsrc]
-            e_retry = (t + chunk_bytes / rate)[qdst, qsrc]
+            t_next = jnp.nextafter(t, jnp.float32(jnp.inf))
+            e_next = jnp.maximum(
+                t + (chunk_bytes - bstate.credit) / rate, t_next
+            )[qdst, qsrc]
+            e_retry = jnp.maximum(t + chunk_bytes / rate, t_next)[qdst, qsrc]
             e_svc = svc[qdst, qsrc]
             e_pend = pending[qdst, qsrc]
             qv = jnp.where(is_drn & e_svc, e_pend, qv)

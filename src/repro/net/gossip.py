@@ -848,6 +848,7 @@ class GossipNetwork:
         bank_cfg: Optional[BankGossipConfig] = None,
         obs_cfg=None,
         faults_cfg=None,
+        serve_cfg=None,
     ):
         n = top.num_nodes
         self.topology = top
@@ -981,6 +982,25 @@ class GossipNetwork:
             if bank_cfg is not None:
                 self._last_srv = jnp.zeros((n, n), jnp.float32)
                 self._bw_bytes = jnp.asarray(top.bandwidth / 8.0, jnp.float32)
+        # inference-serving layer (repro.net.serve): the static key maps
+        # None AND rate<=0 to None, under which nothing below runs and the
+        # engines compile the literal serve-free programs (the degenerate
+        # limit tests/test_serve.py pins bitwise)
+        self.serve_cfg = serve_cfg
+        self._serve = None
+        if serve_cfg is not None:
+            from repro.net import serve as serve_lib
+            self._serve = serve_lib.serve_key(serve_cfg)
+        if self._serve is not None:
+            serve_lib.validate_serve(self._serve, cfg.engine, mesh)
+            self._equeue, self._eislot, ib = serve_lib.extend_queue(
+                self._equeue, self._eislot, n, self._serve, cfg.seed
+            )
+            self._infer_base = jnp.int32(ib)
+            self._sstate = serve_lib.init_serve_state(n, self._serve)
+            self._serve_base = serve_lib.serve_base_key(
+                cfg.seed, self._serve
+            )
 
     # --- replica access ----------------------------------------------------
 
@@ -1115,6 +1135,10 @@ class GossipNetwork:
             "staleness_link": np.asarray(m.staleness_link, np.int64)[:taken],
             "rejected": np.asarray(m.rejected, np.int64)[:taken],
             "quarantined": np.asarray(m.quarantined, np.int64)[:taken],
+            "requests_served": np.asarray(
+                m.requests_served, np.int64)[:taken],
+            "serve_staleness": np.asarray(
+                m.serve_staleness, np.int64)[:taken],
         }
         final = {
             "bytes_sent": self.bytes_sent(),
@@ -1312,6 +1336,9 @@ class GossipNetwork:
         """Run every continuous-time event at or before ``t`` as ONE jitted
         while-loop dispatch (``repro.net.events``). Delivery slots recycle
         in place, so the queue state simply persists across calls."""
+        if self._serve is not None:
+            self._advance_events_serve(t)
+            return
         from repro.net import events as events_lib
 
         limit = jnp.int32(self.cfg.max_events_per_advance)
@@ -1387,6 +1414,82 @@ class GossipNetwork:
         self.tick += int(done)
         self.rounds_run += int(done)
         self.events_processed += int(done)
+
+    def _advance_events_serve(self, t: float) -> None:
+        """The event advance with the inference-serving slots live
+        (``repro.net.serve``): same loop, same transport program, plus
+        KIND_INFER batches that never split the main key. The dict result
+        avoids a combinatorial tuple-unpack over bank x faults x obs."""
+        from repro.net import events as events_lib
+
+        limit = jnp.int32(self.cfg.max_events_per_advance)
+        fire_cap = jnp.int32(self.cfg.max_ticks_per_advance)
+        fl = self.faults_cfg
+        obs_carry = (
+            (self._metrics, self._ring) if self.obs_cfg is not None else ()
+        )
+        if self.bank_cfg is not None:
+            fn = events_lib._advance_events_bank_jit(
+                self.cfg.impl, self.bank_cfg.impl, self.obs_cfg, fl,
+                self._codec, self._serve,
+            )
+            args = (
+                self.replicas.dags, self.replicas.bank_state.have,
+                self.replicas.bank_state.credit,
+                self.replicas.bank_state.sent, self._last_srv,
+                self._digest, self._equeue.time, self._equeue.valid,
+                self._equeue.kind, self._equeue.src, self._equeue.dst,
+                self._equeue.seq, self._eislot, self._key,
+                jnp.float32(t), limit, fire_cap, self._part_mask,
+                self._part_t0, self._part_t1, self._drop, self._nbr_idx,
+                self._nbr_valid, self._bw_bytes, self._chunk_bytes,
+                self._sstate, self._serve_base, self._infer_base,
+            )
+            if fl is not None:
+                args = args[:4] + (self._fstate,) + args[4:]
+            out = self._dispatch(
+                "advance_events_bank_serve", fn, *args, *obs_carry
+            )
+            self.replicas = self.replicas._replace(
+                dags=out["dags"], bank_state=out["bstate"]
+            )
+            if fl is not None:
+                self._fstate = out["fstate"]
+            self._last_srv = out["last_srv"]
+        else:
+            fn = events_lib._advance_events_jit(
+                self.cfg.impl, self.obs_cfg, fl, self._serve
+            )
+            args = (
+                self.replicas.dags, self._equeue.time, self._equeue.valid,
+                self._equeue.kind, self._equeue.src, self._equeue.dst,
+                self._equeue.seq, self._eislot, self._key, jnp.float32(t),
+                limit, fire_cap, self._part_mask, self._part_t0,
+                self._part_t1, self._drop, self._nbr_idx, self._nbr_valid,
+                self._sstate, self._serve_base, self._infer_base,
+            )
+            out = self._dispatch(
+                "advance_events_serve", fn, *args, *obs_carry
+            )
+            self.replicas = self.replicas._replace(dags=out["dags"])
+        self._key = out["key"]
+        self._sstate = out["sstate"]
+        if self.obs_cfg is not None:
+            self._metrics, self._ring = out["metrics"], out["ring"]
+        self._equeue = self._equeue._replace(time=out["qt"], valid=out["qv"])
+        done = int(out["done"])
+        self.tick += done
+        self.rounds_run += done
+        self.events_processed += done
+
+    def serve_report(self):
+        """Host-side serving summary (``repro.net.serve.report``):
+        per-node served/arrivals/dropped counters, throughput inputs, and
+        staleness-at-admit percentiles. None when serving is off."""
+        if self._serve is None:
+            return None
+        from repro.net import serve as serve_lib
+        return serve_lib.report(self._sstate, self._serve)
 
     def advance(self, t: float) -> None:
         """Run every sync tick scheduled at or before simulation time ``t``

@@ -24,8 +24,8 @@ from repro.obs.export import (ObsReport, chrome_trace, metrics_jsonl_lines,
                               write_chrome_trace, write_metrics_jsonl)
 from repro.obs.metrics import MetricsState, ObsConfig, init_metrics
 from repro.obs.trace import (KIND_COMMIT, KIND_DELIVER, KIND_DRAIN,
-                             KIND_PARTITION, KIND_PUBLISH, KIND_REJECT,
-                             TraceRing, init_trace)
+                             KIND_INFER, KIND_PARTITION, KIND_PUBLISH,
+                             KIND_REJECT, TraceRing, init_trace)
 
 
 def observe_round(
@@ -43,6 +43,10 @@ def observe_round(
     rejects=None,             # (N, N) i32 cumulative digest rejections
     rejects_delta=None,       # (N, N) i32 rejections charged this round
     quarantine_after=0,
+    serve_counts=None,        # (N,) i32 cumulative requests served
+    serve_stale=None,         # () i32 max gated staleness at this admit
+    infer_nodes=None,         # (N,) bool nodes that admitted a batch now
+    infer_arg=None,           # (N,) i32 batch size admitted per node
 ) -> tuple:
     """THE collector step every obs-enabled loop body runs (jit-safe).
 
@@ -51,7 +55,11 @@ def observe_round(
     moved — one DRAIN append (arg = bytes). Fault runs
     (``repro.net.faults``) additionally pass their rejection state: the
     rejected/quarantined series sample from ``rejects`` and each link that
-    rejected chunks this round appends one REJECT record. Pure read of its
+    rejected chunks this round appends one REJECT record. Serve runs
+    (``repro.net.serve``) pass their counters: the requests_served /
+    serve_staleness series sample from ``serve_counts`` / ``serve_stale``
+    and each node admitting a batch this instant appends one INFER record
+    (arg = batch size). Pure read of its
     inputs: no PRNG, no writes, so threading it through a carry cannot
     perturb the simulation (the bitwise claim ``tests/test_obs.py`` pins).
     """
@@ -59,6 +67,7 @@ def observe_round(
     metrics = _metrics_lib.update(
         metrics, cfg, t, new_dags, delta, bstate, digest, bank_impl,
         rejects=rejects, quarantine_after=quarantine_after,
+        serve_counts=serve_counts, serve_stale=serve_stale,
     )
     if cfg.trace:
         if live_edges is not None:
@@ -77,6 +86,15 @@ def observe_round(
                 ring, t, KIND_REJECT, rejects_delta > 0,
                 rejects_delta.astype(jnp.float32),
             )
+        if infer_nodes is not None:
+            n = infer_nodes.shape[0]
+            eye = jnp.eye(n, dtype=bool)
+            ring = _trace_lib.append_edges(
+                ring, t, KIND_INFER, infer_nodes[:, None] & eye,
+                jnp.broadcast_to(
+                    infer_arg[:, None], (n, n)
+                ).astype(jnp.float32),
+            )
     return metrics, ring
 
 __all__ = [
@@ -85,5 +103,5 @@ __all__ = [
     "chrome_trace", "write_chrome_trace",
     "metrics_jsonl_lines", "write_metrics_jsonl",
     "KIND_DELIVER", "KIND_DRAIN", "KIND_PUBLISH", "KIND_COMMIT",
-    "KIND_PARTITION", "KIND_REJECT",
+    "KIND_PARTITION", "KIND_REJECT", "KIND_INFER",
 ]

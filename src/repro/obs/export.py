@@ -124,6 +124,12 @@ def chrome_trace(report: ObsReport,
                 "ts": t * _US, "dur": 1.0,
                 "args": {"src": src, "chunks": arg},
             })
+        elif kind == trace_lib.KIND_INFER:
+            slices.append({
+                "name": "infer", "ph": "X", "pid": 0, "tid": dst,
+                "ts": t * _US, "dur": 1.0,
+                "args": {"src": src, "batch": arg},
+            })
         elif kind == trace_lib.KIND_PARTITION:
             if arg >= 0.5:
                 part_open = t

@@ -107,6 +107,9 @@ class MetricsState(NamedTuple):
     staleness_link: jnp.ndarray  # (S, N, N) i32 rows receiver i lacks of j
     rejected: jnp.ndarray     # (S,) i32 cumulative digest rejections
     quarantined: jnp.ndarray  # (S,) i32 quarantined directed links
+    requests_served: jnp.ndarray  # (S, N) i32 cumulative inference requests
+    serve_staleness: jnp.ndarray  # (S,) i32 gated staleness at batch admit
+                                  # (-1 = no batch admitted this sample)
 
 
 def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
@@ -127,6 +130,8 @@ def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
         staleness_link=jnp.zeros((s, num_nodes, num_nodes), jnp.int32),
         rejected=jnp.zeros((s,), jnp.int32),
         quarantined=jnp.zeros((s,), jnp.int32),
+        requests_served=jnp.zeros((s, num_nodes), jnp.int32),
+        serve_staleness=jnp.full((s,), -1, jnp.int32),
     )
 
 
@@ -157,6 +162,8 @@ def update(
     bank_impl: Optional[str] = None,
     rejects: Optional[jnp.ndarray] = None,   # (N, N) i32 cumulative rejections
     quarantine_after: int = 0,
+    serve_counts: Optional[jnp.ndarray] = None,  # (N,) i32 cumulative served
+    serve_stale: Optional[jnp.ndarray] = None,   # () i32 staleness at admit
 ) -> MetricsState:
     """Accumulate one round and sample one series row (jit-safe, pure read).
 
@@ -166,6 +173,10 @@ def update(
     single-device ones, like every other cross-replica reduction here).
     ``rejects`` is the fault layer's cumulative rejection matrix (fault
     runs only); without it the rejected/quarantined samples stay zero.
+    ``serve_counts`` / ``serve_stale`` are the inference-serving layer's
+    cumulative per-node served counters and the max gated staleness any
+    batch admitted at this instant saw (serve runs only; without them the
+    requests_served row stays zero and serve_staleness the -1 sentinel).
     """
     union = replica_lib.merge_all(dags)
     tips = dag_lib.num_tips(union, t, cfg.tau_max)
@@ -188,6 +199,11 @@ def update(
         lag = jnp.zeros((), jnp.int32)
         total = jnp.zeros((), jnp.float32)
         link_bytes = m.link_bytes
+    n = dags.publisher.shape[0]
+    if serve_counts is None:
+        serve_counts = jnp.zeros((n,), jnp.int32)
+    if serve_stale is None:
+        serve_stale = jnp.full((), -1, jnp.int32)
     cap = m.t.shape[0]
     # first-S-samples policy: past capacity the scatter index goes out of
     # bounds and mode="drop" discards it — count, never wrap
@@ -218,4 +234,10 @@ def update(
             rejected.astype(jnp.int32), mode="drop"
         ),
         quarantined=m.quarantined.at[slot].set(quar, mode="drop"),
+        requests_served=m.requests_served.at[slot].set(
+            serve_counts.astype(jnp.int32), mode="drop"
+        ),
+        serve_staleness=m.serve_staleness.at[slot].set(
+            serve_stale.astype(jnp.int32), mode="drop"
+        ),
     )

@@ -49,6 +49,7 @@ KIND_PUBLISH = 2
 KIND_COMMIT = 3
 KIND_PARTITION = 4
 KIND_REJECT = 5
+KIND_INFER = 6
 
 KIND_NAMES = {
     KIND_DELIVER: "deliver",
@@ -57,6 +58,7 @@ KIND_NAMES = {
     KIND_COMMIT: "commit",
     KIND_PARTITION: "partition",
     KIND_REJECT: "reject",
+    KIND_INFER: "infer",
 }
 
 

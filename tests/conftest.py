@@ -22,6 +22,25 @@ def _known_failures():
         return set()
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jax_caches_between_modules():
+    """Release compiled XLA executables after each test module.
+
+    The suite compiles hundreds of large while_loop programs in one
+    process; with every executable held live by jax's in-process jit
+    cache, the XLA CPU backend eventually segfaults inside
+    backend_compile when a late module (the obs+serve event-engine
+    programs are the largest in the suite) compiles on top of all of
+    them. Per-module teardown bounds the live-executable set; reuse
+    within a module — where the bitwise-equivalence tests rely on the
+    cache — is untouched.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 def pytest_collection_modifyitems(config, items):
     """Strict-xfail every known seed failure.
 

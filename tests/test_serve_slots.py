@@ -1,0 +1,99 @@
+"""SlotServer unit tests (`repro.launch.serve`) — the fixed-slot batching
+model the event-engine serving layer (`repro.net.serve`) reuses the shape
+of. Until now the launcher was only exercised end to end as a script
+(tests/test_serving.py); these pin the slot mechanics one at a time:
+prefill-into-free-slot admission, lockstep decode ticks, done-request
+eviction, and slot reuse after completion."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch.serve import Request, SlotServer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["qwen3-0.6b"].reduced()
+    from repro.models import build_model
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_server(setup, slots=2, max_len=24):
+    cfg, params = setup
+    return SlotServer(cfg, params, slots=slots, max_len=max_len)
+
+
+def make_req(setup, rid, prompt_len=8, max_new=4):
+    cfg, _ = setup
+    rng = np.random.default_rng(rid)
+    return Request(
+        rid, rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32),
+        max_new=max_new,
+    )
+
+
+def test_admit_prefills_into_free_slot(setup):
+    server = make_server(setup, slots=2)
+    r0, r1, r2 = (make_req(setup, i) for i in range(3))
+    assert server.admit(r0)
+    # prefill appended the first token and pinned the request to a slot
+    assert len(r0.out) == 1
+    assert server.active[0] is r0 and server.active[1] is None
+    assert int(server.tokens[0, 0]) == r0.out[-1]
+    assert server.admit(r1)
+    assert server.active[1] is r1
+    # pool full: admission refuses (the caller's queue keeps the request)
+    assert not server.admit(r2)
+    assert len(r2.out) == 0
+
+
+def test_tick_decodes_all_active_slots_in_lockstep(setup):
+    server = make_server(setup, slots=2)
+    r0 = make_req(setup, 0, max_new=8)
+    r1 = make_req(setup, 1, max_new=8)
+    server.admit(r0)
+    server.admit(r1)
+    n0, n1 = len(r0.out), len(r1.out)
+    server.tick()
+    # ONE decode step advanced BOTH requests by exactly one token
+    assert len(r0.out) == n0 + 1 and len(r1.out) == n1 + 1
+    assert int(server.tokens[0, 0]) == r0.out[-1]
+    assert int(server.tokens[1, 0]) == r1.out[-1]
+    # a tick with nothing active is a no-op (no decode dispatched)
+    idle = make_server(setup, slots=2)
+    tok_before = np.asarray(idle.tokens).copy()
+    idle.tick()
+    np.testing.assert_array_equal(np.asarray(idle.tokens), tok_before)
+
+
+def test_done_request_evicts_and_frees_its_slot(setup):
+    server = make_server(setup, slots=2)
+    req = make_req(setup, 0, max_new=3)
+    server.admit(req)
+    ticks = 0
+    while not req.done:
+        server.tick()
+        ticks += 1
+        assert ticks < 10
+    assert len(req.out) >= req.max_new
+    # eviction freed the slot; the server idles without it
+    assert server.active[0] is None
+    assert not any(server.active)
+
+
+def test_slot_reused_after_completion(setup):
+    server = make_server(setup, slots=1)
+    first = make_req(setup, 0, max_new=2)
+    second = make_req(setup, 1, max_new=2)
+    assert server.admit(first)
+    assert not server.admit(second)         # single slot busy
+    while not first.done:
+        server.tick()
+    # the freed slot admits the next request — same slot index
+    assert server.admit(second)
+    assert server.active[0] is second
+    while not second.done:
+        server.tick()
+    assert second.done and len(second.out) >= second.max_new
