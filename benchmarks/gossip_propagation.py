@@ -28,13 +28,18 @@ diverges from the un-faulted path, a spoofed chunk survives digest
 verification into a gated view, the identity delta codec diverges from
 the uncompressed bank path, a compressed codec falls below a 2x byte
 reduction on the constrained 1 Mbps class, the zero-rate serving config
-diverges from the serve-free path, or the ideal-wire serving arm serves
-zero requests — the CI tripwires.
-It also exports the last obs-on run as ``obs_sample.trace.json`` (the
-Perfetto-loadable artifact CI uploads).
+diverges from the serve-free path, the ideal-wire serving arm serves
+zero requests, a histogram-instrumented run diverges from the obs-off
+path, or the warmed histogram collectors cost more than 10% wall time —
+the CI tripwires.
+It also exports the last obs-on run as
+``bench_artifacts/obs_sample.trace.json`` (the Perfetto-loadable
+artifact CI uploads; the directory is untracked — bench outputs never
+land in the repo).
 """
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -53,9 +58,12 @@ from repro.net import topology as topo
 from repro.kernels.delta_codec import DeltaCodec
 from repro.net.bank import BankGossipConfig
 from repro.net.faults import ROLE_HONEST, ROLE_SPOOF, FaultConfig
-from repro.obs import ObsConfig, write_chrome_trace
+from repro.obs import HistConfig, ObsConfig, write_chrome_trace
 
-TRACE_SAMPLE_PATH = "obs_sample.trace.json"
+# Bench sample artifacts land in an UNTRACKED output dir (gitignored);
+# CI uploads them from there instead of committing them at the repo root.
+ARTIFACT_DIR = "bench_artifacts"
+TRACE_SAMPLE_PATH = os.path.join(ARTIFACT_DIR, "obs_sample.trace.json")
 
 JSON_PATH = "BENCH_gossip_sync.json"
 
@@ -624,15 +632,24 @@ def run_observability(
       the min) and the obs-on/obs-off ratio must stay under 1.10 — the
       <10% acceptance bound.
 
-    Side effect: the last obs-on report is exported to ``trace_path`` as a
-    Chrome/Perfetto trace — the artifact CI uploads.
+    A third "hist" arm (``ObsConfig(hist=HistConfig())``) re-checks both
+    claims with the streaming latency histograms threaded through the
+    loop and records the publish->commit propagation-delay distribution
+    (the paper's SS-IV confirmation-delay curve) — bin counts plus the
+    p50/p95/p99 summaries — as a ``kind="hist"`` row per engine.
+
+    Side effect: the last hist-on report is exported to ``trace_path``
+    as a Chrome/Perfetto trace (iteration spans + ``hist:`` counter
+    tracks) — the artifact CI uploads.
     """
     rows = []
     report = None
+    arms = (("off", None), ("on", ObsConfig()),
+            ("hist", ObsConfig(hist=HistConfig())))
     for engine in engines:
         walls = {}
         results = {}
-        for tag, obs in (("off", None), ("on", ObsConfig())):
+        for tag, obs in arms:
             best = float("inf")
             for _ in range(2):                     # warmup, then timed
                 res, wall = _run_observed(n, iterations, seed, engine, obs)
@@ -659,7 +676,37 @@ def run_observability(
             trace_dropped=int(report.trace_dropped),
             dispatch_counts=dict(report.dispatch_counts),
         ))
+        hist_equal = _results_bitwise_equal(results["off"], results["hist"])
+        hist_overhead = walls["hist"] / max(walls["off"], 1e-12)
+        report = results["hist"].extras["obs"]
+        hist = report.hist
+        commit_pct = hist["percentiles"]["commit_lat"]
+        emit(
+            f"gossip/observability/hist/{engine}", hist_overhead,
+            f"bitwise_equal_obs_off={hist_equal};"
+            f"overhead_ratio={hist_overhead:.3f};"
+            f"commit_lat_samples={commit_pct['samples']};"
+            f"commit_lat_p50={commit_pct['p50']:.3f};"
+            f"commit_lat_p99={commit_pct['p99']:.3f}",
+        )
+        rows.append(dict(
+            kind="hist", engine=engine, n=n, iterations=iterations,
+            bitwise_equal_obs_off=bool(hist_equal),
+            overhead_ratio=float(hist_overhead),
+            wall_s_obs_off=float(walls["off"]),
+            wall_s_hist_on=float(walls["hist"]),
+            bins=int(hist["bins"]), lo=float(hist["lo"]), hi=float(hist["hi"]),
+            commit_lat_counts=[int(x) for x in hist["counts"]["commit_lat"]],
+            merge_lat_counts=[int(x) for x in hist["counts"]["merge_lat"]],
+            percentiles={
+                name: {k: (None if isinstance(v, float)
+                           and not np.isfinite(v) else v)
+                       for k, v in summ.items()}
+                for name, summ in hist["percentiles"].items()
+            },
+        ))
     if report is not None and trace_path:
+        os.makedirs(os.path.dirname(trace_path) or ".", exist_ok=True)
         write_chrome_trace(report, trace_path)
         print(f"# wrote {trace_path}")
     if record is not None:
@@ -871,8 +918,11 @@ def smoke(json_path: str = JSON_PATH) -> int:
     the ``codec=None`` bank path (engines x faults), a compressed
     codec whose measured byte reduction drops below 2x on the
     constrained 1 Mbps class, a zero-rate serving config that is no
-    longer bitwise the serve-free path, or an ideal-wire serving arm
-    that serves zero requests.
+    longer bitwise the serve-free path, an ideal-wire serving arm
+    that serves zero requests, a histogram-instrumented run that is no
+    longer bitwise the obs-off path (or costs >10% wall time, or samples
+    no merge latencies), or a serving arm whose per-request percentile
+    ladder comes back degenerate (zero queue-wait samples).
 
     N=48 so the same grid point serves the sharded check (48 tiles over
     both the 8x1 and 2x4 meshes the acceptance pins).
@@ -959,8 +1009,15 @@ def smoke(json_path: str = JSON_PATH) -> int:
         if row["overhead_ratio"] > 1.10:
             print(f"# SMOKE FAIL: obs collector overhead above 10%: {row}")
             ok = False
+        if row["kind"] == "hist" and sum(row["merge_lat_counts"]) == 0:
+            print(f"# SMOKE FAIL: hist arm sampled no merge latencies — "
+                  f"the streaming histograms never fired: {row}")
+            ok = False
     if not obs_rows:
         print("# SMOKE FAIL: no observability rows recorded")
+        ok = False
+    if not any(r["kind"] == "hist" for r in obs_rows):
+        print("# SMOKE FAIL: no histogram rows recorded")
         ok = False
     for row in fault_rows:
         if row["kind"] == "equivalence" and not row["bitwise_equal_unfaulted"]:
@@ -995,6 +1052,13 @@ def smoke(json_path: str = JSON_PATH) -> int:
                   f"Poisson replay — events were truncated or the serve "
                   f"key branch drifted: {row}")
             ok = False
+        if row["kind"] == "load" and row["served_total"] > 0:
+            ladder = row.get("request_percentiles")
+            if not ladder or ladder["queue_wait"]["samples"] == 0:
+                print(f"# SMOKE FAIL: serving arm returned a degenerate "
+                      f"per-request percentile ladder (no queue-wait "
+                      f"samples despite served requests): {row}")
+                ok = False
     if not any(r["kind"] == "zero_rate" for r in serve_rows):
         print("# SMOKE FAIL: no zero-rate serve rows recorded")
         ok = False

@@ -85,3 +85,15 @@ def run():
     emit("kernel/gossip_winner/r64_c256",
          _time(lambda: ops.gossip_winner(t, pub, ac, mask_j, impl="pallas")),
          f"jnp_ref_us={us_ref:.0f};nbr_lax_us={us_nbr:.0f}")
+
+    # histogram bincount (the streaming-telemetry scatter-add,
+    # repro.kernels.hist_bincount): blocked one-hot accumulate vs the
+    # at[].add oracle at the obs hot-spot shape (one advance's worth of
+    # weighted latency samples into a 65-bin log-spaced layout)
+    for m in (1 << 12, 1 << 16):
+        idx = jnp.asarray(rng.integers(0, 65, (m,)), jnp.int32)
+        w = jnp.asarray(rng.integers(0, 4, (m,)), jnp.int32)
+        us_ref = _time(lambda: ref.hist_bincount_ref(idx, w, 65))
+        us_pal = _time(lambda: ops.hist_bincount(idx, w, 65, impl="pallas"))
+        emit(f"kernel/hist_bincount/m{m}_b65", us_pal,
+             f"jnp_ref_us={us_ref:.0f}")

@@ -20,8 +20,16 @@ claims into ``BENCH_gossip_sync.json`` under ``serve_load``:
   healed split: requests keep flowing, the staleness tail pays for the
   isolation.
 
-Every row is read off ``extras["serve_report"]`` — the drained on-device
-serve counters — not off ``GossipNetwork`` private state.
+The load sweep additionally runs with the PR-10 streaming histograms
+armed (``ObsConfig(hist=HistConfig())`` — bitwise-neutral by the obs
+tripwire) and each ``kind="load"`` row carries a per-request
+``request_percentiles`` ladder: queue-wait (arrival -> admission
+seconds) and staleness-at-serve p50/p95/p99 with their bin-width error
+bounds, read off the device-resident quantile sketches rather than any
+host-side sample array.
+
+Every counter row is read off ``extras["serve_report"]`` — the drained
+on-device serve counters — not off ``GossipNetwork`` private state.
 """
 import numpy as np
 
@@ -33,6 +41,7 @@ from repro.net import gossip as gossip_lib
 from repro.net import topology as topo
 from repro.net.bank import BankGossipConfig
 from repro.net.serve import ServeConfig, arrival_times
+from repro.obs import HistConfig, ObsConfig
 
 
 def _finite(x) -> float:
@@ -42,7 +51,7 @@ def _finite(x) -> float:
 
 
 def _run_serving(n, iterations, seed, bandwidth, serve, partition=None,
-                 slot_bytes=7e6):
+                 slot_bytes=7e6, obs=None):
     dcfg = default_dagfl_config(num_nodes=n)
     sim = SimConfig(iterations=iterations, eval_every=max(iterations // 4, 1),
                     seed=seed)
@@ -58,8 +67,22 @@ def _run_serving(n, iterations, seed, bandwidth, serve, partition=None,
                                        max_events_per_advance=65536),
         bank_gossip=BankGossipConfig(chunks_per_slot=4,
                                      slot_bytes=slot_bytes),
-        engine="events", serve=serve, partition=partition,
+        engine="events", serve=serve, partition=partition, obs=obs,
     )
+
+
+def _request_percentiles(res) -> dict:
+    """The per-request p50/p95/p99 ladder off the streaming histograms."""
+    obs_rep = res.extras.get("obs")
+    if obs_rep is None or obs_rep.hist is None:
+        return None
+    pct = obs_rep.hist["percentiles"]
+    return {
+        "queue_wait": {k: _finite(v) if isinstance(v, float) else v
+                       for k, v in pct["queue_wait"].items()},
+        "staleness": {k: _finite(v) if isinstance(v, float) else v
+                      for k, v in pct["serve_stale"].items()},
+    }
 
 
 def _load_row(res, iterations, n, seed) -> dict:
@@ -70,7 +93,7 @@ def _load_row(res, iterations, n, seed) -> dict:
     replay = sum(
         len(arrival_times(seed, cfg, node, horizon)) for node in range(n)
     )
-    return dict(
+    row = dict(
         rate_per_node=float(rep["rate"]),
         arrivals_match_replay=bool(rep["arrived_total"] == replay),
         served_total=int(rep["served_total"]),
@@ -83,6 +106,10 @@ def _load_row(res, iterations, n, seed) -> dict:
         staleness_samples=int(rep["samples"]),
         final_acc=float(res.accs[-1]),
     )
+    ladder = _request_percentiles(res)
+    if ladder is not None:
+        row["request_percentiles"] = ladder
+    return row
 
 
 def run_serve_load(
@@ -116,16 +143,21 @@ def run_serve_load(
     ))
 
     # -- load sweep over the Table-I link classes -------------------------
+    # histograms armed: the queue-wait / staleness-at-serve percentile
+    # ladder rides each row (bitwise-neutral — the obs smoke tripwire)
+    hist_obs = ObsConfig(hist=HistConfig())
     for cls in link_classes:
         bw = topo.TABLE1_LINK_CLASSES[cls]
         res = _run_serving(n, iterations, seed, bw,
-                           ServeConfig(rate=rate))
+                           ServeConfig(rate=rate), obs=hist_obs)
         row = _load_row(res, iterations, n, seed)
+        qw = row["request_percentiles"]["queue_wait"]
         emit(
             f"gossip/serve_load/sweep/{cls}", row["requests_per_s"],
             f"served={row['served_total']};"
             f"stale_p50={row['staleness_p50']};"
             f"stale_p99={row['staleness_p99']};"
+            f"qwait_p50={qw['p50']};qwait_p99={qw['p99']};"
             f"final_acc={row['final_acc']:.3f}",
         )
         rows.append(dict(

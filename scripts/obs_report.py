@@ -2,7 +2,7 @@
 
     python scripts/obs_report.py [--nodes N] [--iterations I]
                                  [--engine ticks|events] [--bank]
-                                 [--out-prefix PREFIX]
+                                 [--percentiles] [--out-prefix PREFIX]
 
 Runs a small ``run_dagfl_gossip`` simulation with the in-loop collectors on
 (``repro.obs``) and writes
@@ -10,14 +10,26 @@ Runs a small ``run_dagfl_gossip`` simulation with the in-loop collectors on
 * ``PREFIX.trace.json`` — Chrome Trace Event JSON. Open it at
   https://ui.perfetto.dev (or ``chrome://tracing``): one track per node
   showing iteration spans, row deliveries, and bank chunk drains, plus an
-  overlay control track with partition windows;
+  overlay control track with partition windows (and, with
+  ``--percentiles``, one ``hist:`` counter track per latency histogram);
 * ``PREFIX.metrics.jsonl`` — one summary line (rounds, dispatch counts,
   final byte/staleness snapshot) followed by one line per in-loop sample
-  (t, tips, staleness, rows_delta, chunk_lag, bytes_total).
+  (t, tips, staleness, rows_delta, chunk_lag, bytes_total). With
+  ``--percentiles`` one ``"kind": "hist"`` line per histogram precedes
+  the samples.
+
+``--percentiles`` arms the streaming latency histograms
+(``ObsConfig(hist=HistConfig())``) and prints a p50/p95/p99 summary per
+histogram — publish->first-merge, publish->commit, chunk transfer delay
+— with the bin-resolution error bound on each value.
 
 The collectors run INSIDE the jitted loops as scan/while-loop carries, so
 the export reflects exactly what the device executed — and the run is
 bitwise identical to an uninstrumented one (see docs/OBSERVABILITY.md).
+
+By default outputs land under ``bench_artifacts/`` (untracked — bench
+sample artifacts are never committed); pass an explicit ``--out-prefix``
+to write elsewhere.
 """
 import argparse
 import os
@@ -33,8 +45,12 @@ def main() -> int:
     ap.add_argument("--engine", choices=("ticks", "events"), default="events")
     ap.add_argument("--bank", action="store_true",
                     help="gossip the model bank too (adds chunk-drain events)")
+    ap.add_argument("--percentiles", action="store_true",
+                    help="arm the streaming histograms and print the "
+                         "p50/p95/p99 ladder per latency histogram")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out-prefix", default="obs_sample")
+    ap.add_argument("--out-prefix",
+                    default=os.path.join("bench_artifacts", "obs_sample"))
     args = ap.parse_args()
 
     from repro.fl.experiments import default_dagfl_config, make_cnn_setup
@@ -42,7 +58,8 @@ def main() -> int:
     from repro.net import gossip as gossip_lib
     from repro.net import topology as topo
     from repro.net.bank import BankGossipConfig
-    from repro.obs import ObsConfig, write_chrome_trace, write_metrics_jsonl
+    from repro.obs import (HistConfig, ObsConfig, write_chrome_trace,
+                           write_metrics_jsonl)
 
     n = args.nodes
     dcfg = default_dagfl_config(num_nodes=n)
@@ -55,9 +72,12 @@ def main() -> int:
         gossip=gossip_lib.GossipConfig(sync_period=1.0, seed=args.seed),
         engine=args.engine,
         bank_gossip=BankGossipConfig(chunks_per_slot=4) if args.bank else None,
-        obs=ObsConfig(),
+        obs=ObsConfig(hist=HistConfig() if args.percentiles else None),
     )
     report = res.extras["obs"]
+    out_dir = os.path.dirname(args.out_prefix)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
     trace_path = f"{args.out_prefix}.trace.json"
     jsonl_path = f"{args.out_prefix}.metrics.jsonl"
     write_chrome_trace(report, trace_path)
@@ -67,6 +87,12 @@ def main() -> int:
           f"trace_events={len(report.trace['t'])} "
           f"trace_dropped={report.trace_dropped} "
           f"dispatch={report.dispatch_counts}")
+    if args.percentiles:
+        for name, summ in report.hist["percentiles"].items():
+            print(f"hist {name}: samples={summ['samples']} "
+                  f"p50={summ['p50']:.4g}±{summ['p50_err']:.2g} "
+                  f"p95={summ['p95']:.4g}±{summ['p95_err']:.2g} "
+                  f"p99={summ['p99']:.4g}±{summ['p99_err']:.2g}")
     print(f"wrote {trace_path} (load at https://ui.perfetto.dev)")
     print(f"wrote {jsonl_path}")
     return 0

@@ -369,8 +369,9 @@ class _GossipLedger:
         self.net.advance(t)
 
     def on_start(self, node_id, t0, t1):
-        # iteration span for the event trace (no-op without telemetry)
-        self.net.trace_host(t0, obs_trace.KIND_PUBLISH, node_id, node_id,
+        # iteration span for the event trace (no-op without telemetry);
+        # routes through the device ring under ObsConfig.device_spans
+        self.net.trace_span(t0, obs_trace.KIND_PUBLISH, node_id, node_id,
                             t1 - t0)
 
     def commit(self, node_id, t1, prepared):
@@ -409,7 +410,7 @@ class _GossipLedger:
         # transport accounting: the committer holds its own payload's
         # chunks; the ring-reused slot's old content leaves everyone else
         self.net.bank_commit(node_id, slot, enc)
-        self.net.trace_host(t1, obs_trace.KIND_COMMIT, node_id, node_id,
+        self.net.trace_span(t1, obs_trace.KIND_COMMIT, node_id, node_id,
                             float(self.seq))
         self.seq += 1
 

@@ -14,6 +14,7 @@ from repro.kernels.event_pop import event_pop
 from repro.kernels.fedavg import fedavg_pallas
 from repro.kernels.flash_attention import decode_attention_pallas, flash_attention_pallas
 from repro.kernels.gossip_merge import gossip_winner, gossip_winner_nbr
+from repro.kernels.hist_bincount import hist_bincount_pallas
 from repro.kernels.model_distance import model_distance_pallas
 from repro.kernels.wkv import wkv_pallas
 from repro.kernels import ref
@@ -53,8 +54,29 @@ def wkv(r, k, v, logw, u, chunk: int = 32):
     return wkv_pallas(r, k, v, logw, u, chunk=chunk, interpret=_interpret_default())
 
 
+def hist_bincount(idx, weights, num_bins: int, impl: str = None,
+                  block_m: int = 512):
+    """Weighted bincount for the streaming histograms (m,) -> (num_bins,).
+
+    ``impl``: None picks "pallas" on TPU and the pure-lax scatter-add
+    oracle elsewhere (the ``event_pop`` dispatch rule) — in-loop
+    histogram updates stay cheap on CPU hosts.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "lax"
+    if impl == "lax":
+        return ref.hist_bincount_ref(idx, weights, num_bins)
+    if impl != "pallas":
+        raise ValueError(f"unknown hist_bincount impl: {impl!r}")
+    return hist_bincount_pallas(
+        idx, weights, num_bins, block_m=block_m,
+        interpret=_interpret_default(),
+    )
+
+
 __all__ = [
     "fedavg", "model_distance", "flash_attention", "decode_attention", "wkv",
     "gossip_winner", "gossip_winner_nbr", "chunk_dedup", "transfer_select",
-    "event_pop", "DeltaCodec", "quant_blocks", "topk_blocks", "ref",
+    "event_pop", "hist_bincount", "DeltaCodec", "quant_blocks",
+    "topk_blocks", "ref",
 ]

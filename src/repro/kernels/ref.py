@@ -239,3 +239,20 @@ def decode_attention_ref(
     scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     return jnp.einsum("bhs,bshd->bhd", probs, vv)
+
+
+def hist_bincount_ref(
+    idx: jnp.ndarray,      # (m,) int32 bin indices
+    weights: jnp.ndarray,  # (m,) int32 sample weights
+    num_bins: int,
+) -> jnp.ndarray:
+    """Weighted bincount: out[b] = sum of weights where idx == b.
+
+    Out-of-range indices are dropped on BOTH sides, matching the Pallas
+    kernel's one-hot compare — ``mode="drop"`` alone would Python-wrap
+    negatives into the tail bins, so they are remapped past the end
+    first; never scattered into a clamped neighbouring bin.
+    """
+    idx = jnp.where(idx < 0, jnp.int32(num_bins), idx)
+    out = jnp.zeros((num_bins,), jnp.int32)
+    return out.at[idx].add(weights.astype(jnp.int32), mode="drop")

@@ -390,7 +390,7 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
             if obs is not None:
                 (dags, bstate, last_srv, key, qt, qv, fires, done,
                  metrics, ring) = carry
-                old_dags, old_sent = dags, bstate.sent
+                old_dags, old_sent, old_have = dags, bstate.sent, bstate.have
             else:
                 dags, bstate, last_srv, key, qt, qv, fires, done = carry
             idx, _found = event_pop(qt, qkind, qseq, qv)
@@ -460,7 +460,7 @@ def _advance_events_bank_jit(impl: str, bank_impl, obs=None, faults=None,
                 metrics2, ring2 = obs_lib.observe_round(
                     obs, metrics, ring, t, old_dags, dags, live_edges=live,
                     bytes_delta=bstate.sent - old_sent, bstate=bstate,
-                    digest=digest, bank_impl=bank_impl,
+                    digest=digest, bank_impl=bank_impl, old_have=old_have,
                 )
                 return (dags, bstate, last_srv, key, qt, qv, fires, done + 1,
                         metrics2, ring2)
@@ -499,13 +499,58 @@ class InSystemTrace(NamedTuple):
     published: int          # transactions published (excl. genesis)
     overflow: int
     union: DagState
+    trace: Optional[dict] = None   # drained PUBLISH/COMMIT device records
+                                   # (``record_trace=True`` runs only)
+    trace_dropped: int = 0
 
     def tail_mean(self, frac: float = 0.5) -> float:
         return stability_lib.tail_mean(self.tips, frac)
 
+    def to_report(self):
+        """Fold this bespoke trace into the shared ``repro.obs`` format.
+
+        Returns an ``ObsReport`` whose series are the per-publish
+        ``t``/``tips``/``staleness`` samples and whose trace is the
+        device-recorded PUBLISH/COMMIT record set (empty without
+        ``record_trace``) — so ``metrics_jsonl_lines`` /
+        ``chrome_trace`` / ``write_*`` work on tip-sim runs unchanged.
+        ``tail_mean`` stays the stability acceptance metric; this is the
+        export path only.
+        """
+        from repro.obs.export import ObsReport
+        pub = np.asarray(self.union.publisher)
+        occ = pub >= 0
+        # genesis is published by the virtual node id N, so the max
+        # occupied publisher id IS the node count
+        n = int(pub[occ].max()) if occ.any() else 0
+        trace = self.trace if self.trace is not None else {
+            "t": np.zeros((0,), np.float64),
+            "kind": np.zeros((0,), np.int32),
+            "src": np.zeros((0,), np.int32),
+            "dst": np.zeros((0,), np.int32),
+            "arg": np.zeros((0,), np.float64),
+        }
+        return ObsReport(
+            num_nodes=n,
+            engine="insystem",
+            rounds=int(self.published),
+            series={
+                "t": np.asarray(self.times, np.float64),
+                "tips": np.asarray(self.tips, np.float64),
+                "staleness": np.asarray(self.staleness, np.float64),
+            },
+            rows_merged=np.zeros((n,), np.int64),
+            link_bytes=np.zeros((n, n), np.float64),
+            samples_dropped=int(self.overflow),
+            trace=trace,
+            trace_dropped=int(self.trace_dropped),
+            final={"published": float(self.published)},
+        )
+
 
 @functools.lru_cache(maxsize=None)
-def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
+def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int,
+                 record_trace: bool = False):
     """The in-system §IV driver: one jitted while_loop over ALL event kinds.
 
     Deliveries batch exactly as in engine A; a START samples a node
@@ -515,13 +560,27 @@ def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
     ``h_i`` seconds out in a recycled pending slot; a PUBLISH lands the
     transaction at the globally-sequenced row of the publisher's replica,
     credits the reserved approvals, and samples the union tip count.
+
+    ``record_trace`` threads a ``repro.obs.trace.TraceRing`` through the
+    carry and emits the publisher's spans FROM INSIDE the jitted loop —
+    one KIND_PUBLISH record when a START reserves its tips (arg = the
+    node's ``h_i`` duration) and one KIND_COMMIT when the PUBLISH lands
+    (arg = global sequence) — the device-side counterpart of the host
+    ``trace_host`` spans. False (the default, its own cache entry) keeps
+    the literal trace-free program.
     """
     start_slot = e_slots + p_slots
+    if record_trace:
+        from repro.obs import trace as obs_trace
+
+    def _self_edge(n, node):
+        ids = jnp.arange(n, dtype=jnp.int32)
+        return (ids[:, None] == node) & (ids[None, :] == node)
 
     def run(dags, qtime, qvalid, qkind, qsrc, qdst, qseq, islot, pend, h,
             rate, tau_max, horizon, limit, drop, nbr_idx, nbr_valid,
             part_mask, part_t0, part_t1, key, trace_t, trace_tips,
-            trace_stale):
+            trace_stale, *obs_carry):
         n = dags.publisher.shape[0]
         tcap = trace_t.shape[0]
         key, k0 = jax.random.split(key)
@@ -533,13 +592,16 @@ def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
 
         def body(carry):
             (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf,
-             done) = carry
+             *rest) = carry
+            done = rest[-1]
+            rest = tuple(rest[:-1])
             idx, _found = event_pop(qt, qkind, qseq, qv)
             t = qt[idx]
             knd = qkind[idx]
 
             def do_deliver(op):
-                dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf = op
+                (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur,
+                 ovf, *rest) = op
                 # fire_cap = imax: the tip sim never elides (it has no tick
                 # twin to stay bitwise with; the horizon is one advance)
                 dags, qt, _f, key, _dlv, _live, _pm = _deliver_round(
@@ -548,10 +610,12 @@ def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
                     part_mask, part_t0, part_t1, drop, nbr_idx, nbr_valid,
                     impl,
                 )
-                return dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf
+                return (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst,
+                        cur, ovf, *rest)
 
             def do_publish(op):
-                dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf = op
+                (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur,
+                 ovf, *rest) = op
                 node = qd[idx]
                 dag_i = jax.tree_util.tree_map(lambda x: x[node], dags)
                 row, new_count = replica_lib.global_row(dag_i, seqc)
@@ -573,10 +637,19 @@ def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
                 tst = tst.at[slot].set(stale.astype(jnp.float32))
                 ovf = ovf + (cur >= tcap).astype(jnp.int32)
                 cur = jnp.minimum(cur + 1, tcap)
-                return dags, qt, qv, qd, pend, key, seqc + 1, tt, ttips, tst, cur, ovf
+                if record_trace:
+                    (ring,) = rest
+                    ring = obs_trace.append_edges(
+                        ring, t, obs_trace.KIND_COMMIT, _self_edge(n, node),
+                        seqc.astype(jnp.float32),
+                    )
+                    rest = (ring,)
+                return (dags, qt, qv, qd, pend, key, seqc + 1, tt, ttips,
+                        tst, cur, ovf, *rest)
 
             def do_start(op):
-                dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf = op
+                (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur,
+                 ovf, *rest) = op
                 key, kn, ks, ka = jax.random.split(key, 4)
                 node = jax.random.randint(kn, (), 0, n)
                 dag_i = jax.tree_util.tree_map(lambda x: x[node], dags)
@@ -593,22 +666,35 @@ def _tip_sim_jit(impl: str, k: int, e_slots: int, p_slots: int):
                     t + jax.random.exponential(ka) / rate
                 )
                 ovf = ovf + (~has).astype(jnp.int32)
-                return dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf
+                if record_trace:
+                    # an iteration dropped for want of a pending slot never
+                    # publishes — no span for it either
+                    (ring,) = rest
+                    ring = obs_trace.append_edges(
+                        ring, t, obs_trace.KIND_PUBLISH,
+                        _self_edge(n, node) & has, h[node],
+                    )
+                    rest = (ring,)
+                return (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst,
+                        cur, ovf, *rest)
 
             branch = jnp.where(
                 knd == KIND_DELIVER, 0,
                 jnp.where(knd == KIND_PUBLISH, 1, 2),
             )
-            op = (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur, ovf)
+            op = (dags, qt, qv, qd, pend, key, seqc, tt, ttips, tst, cur,
+                  ovf) + rest
             out = jax.lax.switch(branch, [do_deliver, do_publish, do_start], op)
-            return out + (done + 1,)
+            return tuple(out) + (done + 1,)
 
         init = (dags, qtime, qvalid, qdst, pend, key, jnp.int32(1),
-                trace_t, trace_tips, trace_stale, jnp.int32(0), jnp.int32(0),
-                jnp.int32(0))
-        (dags, _qt, _qv, _qd, _pend, _key, seqc, tt, ttips, tst, cur, ovf,
-         done) = jax.lax.while_loop(cond, body, init)
-        return dags, tt, ttips, tst, cur, ovf, seqc, done
+                trace_t, trace_tips, trace_stale, jnp.int32(0),
+                jnp.int32(0)) + tuple(obs_carry) + (jnp.int32(0),)
+        out = jax.lax.while_loop(cond, body, init)
+        (dags, _qt, _qv, _qd, _pend, _key, seqc, tt, ttips, tst, cur,
+         ovf) = out[:12]
+        done = out[-1]
+        return (dags, tt, ttips, tst, cur, ovf, seqc, done) + out[12:-1]
 
     return jax.jit(run)
 
@@ -627,6 +713,7 @@ def simulate_insystem_tips(
     partition=None,                 # Optional[gossip.PartitionSchedule]
     max_pending: int = 64,
     trace_cap: Optional[int] = None,
+    record_trace: bool = False,
 ) -> InSystemTrace:
     """Measure the Eq. (4) tip process INSIDE the full gossip system.
 
@@ -640,6 +727,14 @@ def simulate_insystem_tips(
     under ``h`` the tail mean reproduces ``stability.equilibrium_tips``
     (the bench-grid acceptance, ``benchmarks/stability_tips.py``); slow
     overlays inflate it (``examples/async_stragglers.py``).
+
+    ``record_trace=True`` additionally threads a device-resident
+    ``repro.obs.trace.TraceRing`` through the jitted loop and drains it
+    into ``InSystemTrace.trace`` (one PUBLISH span per started
+    iteration, one COMMIT per landed transaction) — the shared
+    ``repro.obs`` record format ``InSystemTrace.to_report()`` exports.
+    The measured series is bitwise-unchanged either way (pinned by
+    ``tests/test_hist.py``).
     """
     if sync_period <= 0:
         raise ValueError("in-system tip sim needs a positive sync_period")
@@ -691,13 +786,26 @@ def simulate_insystem_tips(
     nbr_idx, nbr_valid = gossip_lib._neighbor_table_cached(
         np.asarray(top.adjacency, bool).tobytes(), n
     )
-    dags, tt, ttips, tst, cur, ovf, seqc, _done = _tip_sim_jit(impl, k, e, p)(
+    obs_carry = ()
+    if record_trace:
+        from repro.obs import trace as obs_trace
+        ring0 = obs_trace.init_trace(2 * trace_cap + 8)
+        obs_carry = (ring0,)
+    out = _tip_sim_jit(impl, k, e, p, record_trace=record_trace)(
         dags, qtime, qvalid, qkind, qsrc, qdst, qseq, islot, pend, h,
         jnp.float32(arrival_rate), jnp.float32(tau_max), jnp.float32(horizon),
         jnp.int32(limit), jnp.asarray(top.drop), nbr_idx, nbr_valid,
         part_mask, jnp.float32(pt0), jnp.float32(pt1),
         jax.random.PRNGKey(seed), trace_t, trace_tips, trace_stale,
+        *obs_carry,
     )
+    dags, tt, ttips, tst, cur, ovf, seqc, _done = out[:8]
+    span_trace, span_dropped = None, 0
+    if record_trace:
+        from repro.obs import trace as obs_trace
+        ring = out[8]
+        span_trace = obs_trace.drain(ring)
+        span_dropped = int(ring.dropped)
     cur = int(cur)
     return InSystemTrace(
         times=np.asarray(tt, np.float64)[:cur],
@@ -706,4 +814,6 @@ def simulate_insystem_tips(
         published=int(seqc) - 1,
         overflow=int(ovf),
         union=replica_lib.merge_all_jit(dags),
+        trace=span_trace,
+        trace_dropped=span_dropped,
     )

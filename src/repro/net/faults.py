@@ -546,7 +546,7 @@ def _advance_bank_faults_jit(impl: str, bank_impl, faults: FaultConfig,
             metrics, ring = obs_lib.observe_round(
                 obs, metrics, ring, t, dags, new, live_edges=edges,
                 bytes_delta=newb.sent - bstate.sent, bstate=newb,
-                digest=digest, bank_impl=bank_impl,
+                digest=digest, bank_impl=bank_impl, old_have=bstate.have,
                 rejects=newf.rejects,
                 rejects_delta=newf.rejects - fstate.rejects,
                 quarantine_after=faults.quarantine_after,
@@ -661,7 +661,7 @@ def _converge_bank_faults_jit(impl: str, bank_impl, faults: FaultConfig,
             metrics, ring = obs_lib.observe_round(
                 obs, metrics, ring, t, dags, new, live_edges=edges,
                 bytes_delta=newb.sent - bstate.sent, bstate=newb,
-                digest=digest, bank_impl=bank_impl,
+                digest=digest, bank_impl=bank_impl, old_have=bstate.have,
                 rejects=newf.rejects,
                 rejects_delta=newf.rejects - fstate.rejects,
                 quarantine_after=faults.quarantine_after,
@@ -829,6 +829,7 @@ def _advance_events_bank_faults_jit(impl: str, bank_impl,
                 (dags, bstate, fstate, last_srv, key, qt, qv, fires, done,
                  metrics, ring) = carry
                 old_dags, old_sent, old_rej = dags, bstate.sent, fstate.rejects
+                old_have = bstate.have
             else:
                 (dags, bstate, fstate, last_srv, key, qt, qv, fires,
                  done) = carry
@@ -886,7 +887,7 @@ def _advance_events_bank_faults_jit(impl: str, bank_impl,
                 metrics2, ring2 = obs_lib.observe_round(
                     obs, metrics, ring, t, old_dags, dags, live_edges=live,
                     bytes_delta=bstate.sent - old_sent, bstate=bstate,
-                    digest=digest, bank_impl=bank_impl,
+                    digest=digest, bank_impl=bank_impl, old_have=old_have,
                     rejects=fstate.rejects,
                     rejects_delta=fstate.rejects - old_rej,
                     quarantine_after=faults.quarantine_after,

@@ -516,7 +516,7 @@ def _advance_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None,
             metrics, ring = obs_lib.observe_round(
                 obs, metrics, ring, t, dags, new, live_edges=edges,
                 bytes_delta=newb.sent - bstate.sent, bstate=newb,
-                digest=digest, bank_impl=bank_impl,
+                digest=digest, bank_impl=bank_impl, old_have=bstate.have,
             )
             return (new, newb, key, metrics, ring), None
 
@@ -608,7 +608,7 @@ def _converge_bank_jit(impl: str, bank_impl, mesh=None, obs=None, faults=None,
             metrics, ring = obs_lib.observe_round(
                 obs, metrics, ring, t, dags, new, live_edges=edges,
                 bytes_delta=newb.sent - bstate.sent, bstate=newb,
-                digest=digest, bank_impl=bank_impl,
+                digest=digest, bank_impl=bank_impl, old_have=bstate.have,
             )
             return (new, newb, key, tick_i + 1, stalled, done + 1,
                     metrics, ring)
@@ -817,6 +817,26 @@ def _converge_jit(impl: str, mesh=None, obs=None, faults=None):
 _bank_commit_jit = jax.jit(bank_lib.commit_chunks)
 
 
+@functools.lru_cache(maxsize=None)
+def _trace_one_jit(n: int):
+    """Jitted single-record append into the device trace ring.
+
+    The record (t, kind, src, dst, arg) goes through the SAME
+    ``TraceRing.append_edges`` prefix-sum path the in-loop collectors use
+    — a one-hot (N, N) mask in the [receiver, sender] layout selects the
+    slot — so host-initiated spans (PUBLISH/COMMIT under
+    ``ObsConfig.device_spans``) share the ring's capacity/overflow
+    discipline with the device-recorded kinds.
+    """
+    def append(ring, t, kind, src, dst, arg):
+        from repro.obs import trace as obs_trace
+        ids = jnp.arange(n, dtype=jnp.int32)
+        mask = (ids[:, None] == dst) & (ids[None, :] == src)
+        return obs_trace.append_edges(ring, t, kind, mask, arg)
+
+    return jax.jit(append)
+
+
 def stride_matrix(top: Topology, sync_period: float, use_strides: bool = True) -> np.ndarray:
     """(N, N) int32 tick stride per link: a link with latency ℓ fires every
     ``ceil(ℓ / sync_period)`` ticks. ``use_strides=False`` (the ideal wire,
@@ -1001,6 +1021,18 @@ class GossipNetwork:
             self._serve_base = serve_lib.serve_base_key(
                 cfg.seed, self._serve
             )
+        if obs_cfg is not None and obs_cfg.hist is not None:
+            # streaming histograms ride inside MetricsState.hist; the
+            # propagation latch starts from the ACTUAL initial state and
+            # the arrival FIFO is sized by the serve queue (0 without it)
+            from repro.obs import hist as hist_lib
+            qcap = int(self._serve.queue_cap) if self._serve is not None else 0
+            hstate = hist_lib.init_hist(
+                obs_cfg.hist, self.replicas.dags, queue_cap=qcap
+            )
+            if mesh is not None:
+                hstate = mesh_lib.replicate(hstate, mesh)
+            self._metrics = self._metrics._replace(hist=hstate)
 
     # --- replica access ----------------------------------------------------
 
@@ -1099,6 +1131,32 @@ class GossipNetwork:
                 (float(t), int(kind), int(src), int(dst), float(arg))
             )
 
+    def trace_device(self, t, kind, src, dst, arg=0.0) -> None:
+        """Record a host-initiated span through the DEVICE trace ring —
+        the ``ObsConfig.device_spans`` path: the same (t, kind, src, dst,
+        arg) record ``trace_host`` buffers, appended via
+        ``TraceRing.append_edges`` instead (one jitted dispatch; values
+        quantize to the ring's f32 wire precision). Pinned against the
+        host-recorded path in ``tests/test_hist.py``. No-op without
+        telemetry/trace."""
+        if self.obs_cfg is None or not self.obs_cfg.trace:
+            return
+        n = self.topology.num_nodes
+        self._ring = self._dispatch(
+            "trace_device", _trace_one_jit(n), self._ring,
+            jnp.float32(t), jnp.int32(kind), jnp.int32(src),
+            jnp.int32(dst), jnp.float32(arg),
+        )
+
+    def trace_span(self, t, kind, src, dst, arg=0.0) -> None:
+        """PUBLISH/COMMIT entry point for the FL driver: routes to the
+        device ring when ``ObsConfig.device_spans`` is set, to the host
+        buffer otherwise (the default, free path)."""
+        if self.obs_cfg is not None and self.obs_cfg.device_spans:
+            self.trace_device(t, kind, src, dst, arg)
+        else:
+            self.trace_host(t, kind, src, dst, arg)
+
     def _note_partition(self, t: float) -> None:
         """Record the partition's begin/heal transitions once each, the
         first time the clock reaches them."""
@@ -1148,6 +1206,10 @@ class GossipNetwork:
         if self.faults_cfg is not None and self._fstate is not None:
             final["rejected"] = float(np.asarray(self._fstate.rejects).sum())
             final["quarantined"] = float(self.quarantined_links().sum())
+        hist = None
+        if self.obs_cfg.hist is not None:
+            from repro.obs import hist as hist_lib
+            hist = hist_lib.report_dict(m.hist, self.obs_cfg.hist)
         return obs_lib.ObsReport(
             num_nodes=self.topology.num_nodes,
             engine=self.cfg.engine,
@@ -1160,6 +1222,7 @@ class GossipNetwork:
             trace_dropped=int(self._ring.dropped),
             dispatch_counts=dict(self.dispatch_counts),
             final=final,
+            hist=hist,
         )
 
     # --- fault injection (only when constructed with faults_cfg) ------------

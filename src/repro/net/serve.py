@@ -420,6 +420,7 @@ def _advance_events_serve_jit(impl: str, serve: ServeConfig, obs=None,
         def body(carry):
             if obs is not None:
                 dags, qt, qv, fires, key, done, sstate, metrics, ring = carry
+                old_sstate = sstate
             else:
                 dags, qt, qv, fires, key, done, sstate = carry
             idx, _found = event_pop(qt, qkind, qseq, qv)
@@ -457,10 +458,23 @@ def _advance_events_serve_jit(impl: str, serve: ServeConfig, obs=None,
                 (dags, qt, qv, fires, key, sstate),
             )
             if obs is not None:
+                kw = {}
+                if obs.hist is not None:
+                    # per-request histograms: the stale vector only weighs
+                    # in when a batch admitted (an INFER head, which left
+                    # dags untouched), so recomputing it post-cond reads
+                    # exactly what infer_step saw
+                    kw = dict(
+                        serve_stale_node=gated_staleness(dags),
+                        serve_arrived=sstate.arrivals - old_sstate.arrivals,
+                        serve_enq=(sstate.queued - old_sstate.queued
+                                   + batch_now),
+                        serve_queued=sstate.queued,
+                    )
                 metrics, ring = obs_lib.observe_round(
                     obs, metrics, ring, t, old, dags, live_edges=live,
                     serve_counts=sstate.served, serve_stale=s_now,
-                    infer_nodes=admitted, infer_arg=batch_now,
+                    infer_nodes=admitted, infer_arg=batch_now, **kw,
                 )
                 return (dags, qt, qv, fires, key, done + 1, sstate,
                         metrics, ring)
@@ -532,6 +546,7 @@ def _advance_events_bank_serve_jit(impl: str, bank_impl,
             if obs is not None:
                 metrics, ring = it[9 + f], it[10 + f]
                 old_dags, old_sent = dags, bstate.sent
+                old_have, old_sstate = bstate.have, sstate
                 if faults is not None:
                     old_rej = fstate.rejects
             idx, _found = event_pop(qt, qkind, qseq, qv)
@@ -657,10 +672,25 @@ def _advance_events_bank_serve_jit(impl: str, bank_impl,
                     kw = dict(rejects=fstate.rejects,
                               rejects_delta=fstate.rejects - old_rej,
                               quarantine_after=faults.quarantine_after)
+                if obs.hist is not None:
+                    # see the bankless variant: only INFER heads give the
+                    # stale vector weight, and they leave dags/bstate
+                    # untouched, so the post-cond recompute is what
+                    # infer_step gated on
+                    sat_h = chunk_kernel.chunk_dedup(
+                        bstate.have, digest, impl=bank_impl
+                    )
+                    kw.update(
+                        serve_stale_node=gated_staleness(dags, sat_h),
+                        serve_arrived=sstate.arrivals - old_sstate.arrivals,
+                        serve_enq=(sstate.queued - old_sstate.queued
+                                   + batch_now),
+                        serve_queued=sstate.queued,
+                    )
                 metrics, ring = obs_lib.observe_round(
                     obs, metrics, ring, t, old_dags, dags, live_edges=live,
                     bytes_delta=bstate.sent - old_sent, bstate=bstate,
-                    digest=digest, bank_impl=bank_impl,
+                    digest=digest, bank_impl=bank_impl, old_have=old_have,
                     serve_counts=sstate.served, serve_stale=s_now,
                     infer_nodes=admitted, infer_arg=batch_now, **kw,
                 )

@@ -18,10 +18,12 @@ Entry points: ``GossipNetwork(obs_cfg=ObsConfig(...))``,
 """
 import jax.numpy as jnp
 
+from repro.obs import hist as _hist_lib
 from repro.obs import metrics as _metrics_lib
 from repro.obs import trace as _trace_lib
 from repro.obs.export import (ObsReport, chrome_trace, metrics_jsonl_lines,
                               write_chrome_trace, write_metrics_jsonl)
+from repro.obs.hist import HistConfig, HistState, init_hist
 from repro.obs.metrics import MetricsState, ObsConfig, init_metrics
 from repro.obs.trace import (KIND_COMMIT, KIND_DELIVER, KIND_DRAIN,
                              KIND_INFER, KIND_PARTITION, KIND_PUBLISH,
@@ -47,6 +49,11 @@ def observe_round(
     serve_stale=None,         # () i32 max gated staleness at this admit
     infer_nodes=None,         # (N,) bool nodes that admitted a batch now
     infer_arg=None,           # (N,) i32 batch size admitted per node
+    old_have=None,            # (N, S, C) bool chunk presence BEFORE (bank)
+    serve_arrived=None,       # (N,) i32 arrivals fired at this instant
+    serve_enq=None,           # (N,) i32 arrivals that found queue room
+    serve_queued=None,        # (N,) i32 queue length AFTER admission
+    serve_stale_node=None,    # (N,) i32 gated staleness per node now
 ) -> tuple:
     """THE collector step every obs-enabled loop body runs (jit-safe).
 
@@ -59,7 +66,11 @@ def observe_round(
     (``repro.net.serve``) pass their counters: the requests_served /
     serve_staleness series sample from ``serve_counts`` / ``serve_stale``
     and each node admitting a batch this instant appends one INFER record
-    (arg = batch size). Pure read of its
+    (arg = batch size). When ``cfg.hist`` is set the streaming histograms
+    of ``repro.obs.hist`` accumulate in the same step (publish->merge /
+    publish->commit row provenance always; chunk completion when the bank
+    state and ``old_have`` are passed; per-request queue wait + staleness
+    when the serve deltas are). Pure read of its
     inputs: no PRNG, no writes, so threading it through a carry cannot
     perturb the simulation (the bitwise claim ``tests/test_obs.py`` pins).
     """
@@ -69,6 +80,14 @@ def observe_round(
         rejects=rejects, quarantine_after=quarantine_after,
         serve_counts=serve_counts, serve_stale=serve_stale,
     )
+    if cfg.hist is not None:
+        metrics = metrics._replace(hist=_hist_lib.observe(
+            cfg.hist, metrics.hist, t, old_dags, new_dags,
+            old_have=old_have, bstate=bstate,
+            serve_arrived=serve_arrived, serve_enq=serve_enq,
+            serve_admit=infer_arg, serve_queued=serve_queued,
+            serve_stale_node=serve_stale_node,
+        ))
     if cfg.trace:
         if live_edges is not None:
             arg = jnp.broadcast_to(
@@ -99,6 +118,7 @@ def observe_round(
 
 __all__ = [
     "ObsConfig", "ObsReport", "MetricsState", "TraceRing",
+    "HistConfig", "HistState", "init_hist",
     "init_metrics", "init_trace", "observe_round",
     "chrome_trace", "write_chrome_trace",
     "metrics_jsonl_lines", "write_metrics_jsonl",

@@ -18,7 +18,18 @@ what rides ``SimResult.extras["obs"]``. Two serializations:
                    ``tests/test_obs.py``).
   JSONL metrics    one summary line (rounds, drops, dispatch counts,
                    final scalars) then one line per metric sample —
-                   greppable, plottable, diffable.
+                   greppable, plottable, diffable. Histogram runs
+                   (``ObsConfig.hist``) add one ``"kind": "hist"`` line
+                   per histogram: bin edges, counts, and the
+                   p50/p95/p99 summaries with their bin-width error
+                   bounds.
+
+Histogram counter tracks: when ``report.hist`` is present the Chrome
+trace additionally carries one ``"ph": "C"`` counter series per
+non-empty histogram (``hist:<name>``), plotting count against BIN INDEX
+in microseconds (ts = bin index, args.le = the bin's upper edge in the
+measured unit) — a compact distribution-shape strip at the trace origin
+rather than a timeline series, since latency bins are not instants.
 
 ``scripts/obs_report.py`` is the CLI wrapper: run a small simulation with
 telemetry on, write both files, print the summary.
@@ -49,6 +60,7 @@ class ObsReport:
     trace_dropped: int
     dispatch_counts: Dict[str, int] = field(default_factory=dict)
     final: Dict[str, float] = field(default_factory=dict)
+    hist: Optional[dict] = None           # repro.obs.hist.report_dict
 
     @property
     def samples(self) -> int:
@@ -148,7 +160,21 @@ def chrome_trace(report: ObsReport,
             "dur": max((t_max - part_open) * _US, 1.0), "args": {},
         })
     slices.sort(key=lambda e: e["ts"])
-    return {"traceEvents": events + slices, "displayTimeUnit": "ms"}
+    counters = []
+    if report.hist is not None:
+        edges = report.hist["edges"]
+        for hname, counts in report.hist["counts"].items():
+            if int(np.asarray(counts).sum()) == 0:
+                continue
+            for b, c in enumerate(np.asarray(counts)):
+                le = float(edges[b + 1]) if b + 1 < len(edges) else None
+                counters.append({
+                    "name": f"hist:{hname}", "ph": "C", "pid": 0, "tid": 0,
+                    "ts": float(b),
+                    "args": {"count": int(c), "le": le},
+                })
+    return {"traceEvents": events + slices + counters,
+            "displayTimeUnit": "ms"}
 
 
 def write_chrome_trace(report: ObsReport, path: str,
@@ -173,6 +199,20 @@ def metrics_jsonl_lines(report: ObsReport) -> list:
         "rows_merged": [int(x) for x in report.rows_merged],
         "final": {k: float(v) for k, v in report.final.items()},
     })]
+    if report.hist is not None:
+        for hname, counts in report.hist["counts"].items():
+            lines.append(json.dumps({
+                "kind": "hist",
+                "name": hname,
+                "bins": report.hist["bins"],
+                "lo": report.hist["lo"],
+                "hi": report.hist["hi"],
+                "edges": [float(x) for x in report.hist["edges"]],
+                "counts": [int(x) for x in counts],
+                **{k: (v if np.isfinite(v) else None)
+                   if isinstance(v, float) else v
+                   for k, v in report.hist["percentiles"][hname].items()},
+            }))
     keys = [k for k in report.series if k != "t"]
     for i, t in enumerate(report.series["t"]):
         row = {"kind": "sample", "t": float(t)}

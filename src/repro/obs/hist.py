@@ -1,0 +1,323 @@
+"""Device-resident streaming histograms for the gossip overlay.
+
+The fixed-capacity series in ``repro.obs.metrics`` keeps the FIRST
+``series_capacity`` raw samples and drops the rest — honest, but the
+paper's §IV claims (tip equilibria, iteration delays, confirmation
+latencies) are *distributional*: percentile statements over every sample
+an unbounded horizon produces. This module adds the complementary
+accumulator: a streaming histogram with fixed log-spaced bin edges keyed
+by a frozen ``HistConfig``, counts as i32 arrays that NEVER drop a sample
+(out-of-range values fold into the first / overflow bin instead of
+vanishing), small enough to ride the same scan/while-loop carries as
+``MetricsState`` — it lives in ``MetricsState.hist`` and is updated by
+``repro.obs.observe_round`` when ``ObsConfig.hist`` is set.
+
+Bin layout (``bins`` regular bins + 1 overflow, counts shape (bins+1,)):
+
+  bin 0          v <= edges[1]           (underflow folds in; the bound
+                                          below a bin-0 percentile is 0)
+  bin i          edges[i] < v <= edges[i+1]   for 1 <= i < bins
+  bin ``bins``   v > edges[bins] = hi    (overflow; a percentile landing
+                                          here reports hi with err = inf)
+
+with ``edges[i] = lo * (hi/lo)**(i/bins)`` — log-spacing makes the
+percentile error a fixed RELATIVE bound, ``(hi/lo)**(1/bins) - 1``
+(~33% per bin at the 8-decade default), the right shape for latency
+tails.
+
+Histograms collected (all in one shared ``HistState`` pytree):
+
+  ``merge_lat``    per-row publish -> first-merge latency: every round,
+                   each (replica, row) whose row IDENTITY changed
+                   (publisher or publish_time — approval-credit drift is
+                   not a first sight) samples ``t - publish_time``;
+  ``commit_lat``   per-row publish -> commit latency, where "commit" is
+                   full propagation: the first sample instant at which
+                   every replica agrees on the row's identity — the §IV
+                   confirmation-delay distribution. ``all_have`` latches
+                   which rows were already propagated so each row version
+                   samples exactly once (ring reuse re-arms the latch);
+  ``chunk_lat``    bank transport: each chunk bit newly set this round
+                   samples ``t - publish_time`` of the receiver's view of
+                   the slot's row (weight = chunks completed; slots whose
+                   row has not merged yet have no reference and skip);
+  ``queue_wait``   per-request admission wait in ``repro.net.serve``:
+                   an arrival-instant FIFO (``qwait_t``/``qwait_head``,
+                   capacity = the serve queue's) mirrors the queue
+                   counter exactly, so each admitted request samples its
+                   own ``t - arrival``;
+  ``serve_stale``  per-request staleness at serve (weight = batch size
+                   admitted at that node's staleness).
+
+Everything here is a PURE READ of the simulation state — the hist-on run
+is bitwise the hist-off run (``tests/test_hist.py`` pins it across
+ticks/events x bank x serve x faulted arms), and ``hist=None`` (the
+default) keeps every jitted program literally what it was.
+
+The bin scatter-add runs through ``repro.kernels.ops.hist_bincount``
+(blocked Pallas kernel on TPU, pure-lax oracle elsewhere — the
+``gossip_winner`` dispatch rule). Host-side percentile extraction
+(``percentile`` / ``summary``) reports the quantile bin's upper edge with
+its bin width as the error bound; ``tests/test_hist.py`` property-tests
+the bound against exact ``numpy.percentile`` of replayed samples.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+HIST_NAMES = ("merge_lat", "commit_lat", "chunk_lat", "queue_wait",
+              "serve_stale")
+
+
+@dataclass(frozen=True)
+class HistConfig:
+    """Histogram knobs (frozen + hashable: rides ``ObsConfig`` into the
+    jit-factory cache keys).
+
+    ``bins`` regular log-spaced bins spanning ``[lo, hi]`` plus one
+    overflow bin; ``impl`` picks the bincount backend ("pallas"/"lax",
+    None = pallas on TPU, lax elsewhere — the shared dispatcher rule).
+    """
+
+    bins: int = 64
+    lo: float = 1e-4
+    hi: float = 1e4
+    impl: Optional[str] = None
+
+
+class HistState(NamedTuple):
+    """The streaming-histogram carry (shapes static per (B, cap, N, Q))."""
+
+    merge_lat: jnp.ndarray    # (B+1,) i32 publish -> first-merge latency
+    commit_lat: jnp.ndarray   # (B+1,) i32 publish -> full propagation
+    chunk_lat: jnp.ndarray    # (B+1,) i32 chunk transfer-completion delay
+    queue_wait: jnp.ndarray   # (B+1,) i32 per-request admission wait
+    serve_stale: jnp.ndarray  # (B+1,) i32 per-request staleness at serve
+    all_have: jnp.ndarray     # (cap,) bool rows already fully propagated
+    qwait_t: jnp.ndarray      # (N, Q) f32 arrival-instant FIFO per node
+    qwait_head: jnp.ndarray   # (N,) i32 FIFO head (pops advance it mod Q)
+
+
+def edges(cfg: HistConfig) -> np.ndarray:
+    """(bins+1,) float64 log-spaced edges, ``edges[0]=lo .. edges[-1]=hi``."""
+    b = int(cfg.bins)
+    return cfg.lo * (cfg.hi / cfg.lo) ** (np.arange(b + 1) / b)
+
+
+def bin_index(values: jnp.ndarray, cfg: HistConfig) -> jnp.ndarray:
+    """i32 bin index in [0, bins] for each value (jit-safe).
+
+    ``v <= lo`` maps to 0 (underflow folds into the first bin),
+    ``v > hi`` to the overflow bin ``bins`` — no sample is ever dropped.
+    """
+    b = int(cfg.bins)
+    ratio = float(np.log(cfg.hi / cfg.lo) / b)
+    v = jnp.maximum(jnp.asarray(values, jnp.float32), jnp.float32(cfg.lo))
+    x = jnp.log(v / jnp.float32(cfg.lo)) / jnp.float32(ratio)
+    idx = jnp.ceil(x).astype(jnp.int32) - 1
+    return jnp.clip(idx, 0, b)
+
+
+def record(counts: jnp.ndarray, values, weights, cfg: HistConfig):
+    """counts + bincount(values binned per ``cfg``, weighted) — jit-safe.
+
+    ``values`` f32 and ``weights`` i32 flatten together; zero-weight
+    entries contribute nothing, which is how masked batches ride a fixed
+    shape. Dispatches through ``ops.hist_bincount`` (Pallas on TPU).
+    """
+    from repro.kernels import ops  # deferred: keep obs importable early
+
+    idx = bin_index(jnp.ravel(values), cfg)
+    w = jnp.ravel(jnp.asarray(weights)).astype(jnp.int32)
+    return counts + ops.hist_bincount(
+        idx, w, int(cfg.bins) + 1, impl=cfg.impl
+    )
+
+
+def rows_propagated(dags) -> jnp.ndarray:
+    """(cap,) bool — rows whose identity every replica agrees on.
+
+    Replica 0 is the reference; a row is "committed" (fully propagated)
+    once it is occupied and every replica holds the same
+    (publisher, publish_time). Approval credit keeps accruing after
+    propagation and is deliberately not part of the predicate.
+    """
+    p0 = dags.publisher[0]
+    t0 = dags.publish_time[0]
+    agree = jnp.all(
+        (dags.publisher == p0[None, :])
+        & (dags.publish_time == t0[None, :]),
+        axis=0,
+    )
+    return agree & (p0 >= 0)
+
+
+def init_hist(cfg: HistConfig, dags, queue_cap: int = 0) -> HistState:
+    """Fresh carry for the stacked replicas ``dags``.
+
+    ``all_have`` starts from the ACTUAL initial propagation state (the
+    genesis row is everywhere already — it must not sample a bogus
+    commit latency at the first round). ``queue_cap`` sizes the serve
+    arrival FIFO; 0 (no serving) keeps zero-size arrays that no traced
+    path touches.
+    """
+    b = int(cfg.bins) + 1
+    n = dags.publisher.shape[0]
+    q = int(queue_cap)
+    return HistState(
+        merge_lat=jnp.zeros((b,), jnp.int32),
+        commit_lat=jnp.zeros((b,), jnp.int32),
+        chunk_lat=jnp.zeros((b,), jnp.int32),
+        queue_wait=jnp.zeros((b,), jnp.int32),
+        serve_stale=jnp.zeros((b,), jnp.int32),
+        all_have=rows_propagated(dags),
+        qwait_t=jnp.zeros((n, q), jnp.float32),
+        qwait_head=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def observe(
+    cfg: HistConfig,
+    h: HistState,
+    t,                       # () f32 sample instant
+    old_dags,                # stacked replicas BEFORE the round
+    new_dags,                # stacked replicas AFTER the round
+    old_have=None,           # (N, S, C) bool chunk presence BEFORE (bank)
+    bstate=None,             # post-round BankState (bank runs only)
+    serve_arrived=None,      # (N,) i32 arrivals fired at this instant
+    serve_enq=None,          # (N,) i32 arrivals that found queue room
+    serve_admit=None,        # (N,) i32 batch sizes admitted at this instant
+    serve_queued=None,       # (N,) i32 queue length AFTER admission
+    serve_stale_node=None,   # (N,) i32 gated staleness per node now
+) -> HistState:
+    """One histogram accumulation step (jit-safe, pure read).
+
+    Runs inside ``observe_round`` when ``ObsConfig.hist`` is set; every
+    argument is state the loop body already carries, so the update adds
+    no new data dependencies to the simulation.
+    """
+    t = jnp.asarray(t, jnp.float32)
+
+    # publish -> first merge: rows whose identity changed on some replica
+    changed = (
+        (new_dags.publisher != old_dags.publisher)
+        | (new_dags.publish_time != old_dags.publish_time)
+    ) & (new_dags.publisher >= 0)
+    lat = jnp.maximum(t - new_dags.publish_time, 0.0)
+    merge_lat = record(h.merge_lat, lat, changed, cfg)
+
+    # publish -> commit (full propagation): first instant all replicas
+    # agree; the latch makes each row version sample exactly once
+    prop = rows_propagated(new_dags)
+    newly = prop & ~h.all_have
+    clat = jnp.maximum(t - new_dags.publish_time[0], 0.0)
+    commit_lat = record(h.commit_lat, clat, newly, cfg)
+    all_have = prop
+
+    # chunk transfer completion: chunks that landed this round, dated
+    # against the receiver's merged view of the slot's row
+    chunk_lat = h.chunk_lat
+    if bstate is not None and old_have is not None:
+        arrived = jnp.sum(
+            (bstate.have & ~old_have).astype(jnp.int32), axis=-1
+        )                                               # (N, S) new chunks
+        known = new_dags.publisher >= 0                 # (N, S) row merged
+        w = jnp.where(known, arrived, 0)
+        slat = jnp.maximum(t - new_dags.publish_time, 0.0)
+        chunk_lat = record(h.chunk_lat, slat, w, cfg)
+
+    # per-request queue wait + staleness at serve: the arrival FIFO
+    # mirrors the serve queue counter exactly (push the enqueued
+    # arrivals at t, pop the admitted batch from the head)
+    queue_wait, serve_stale = h.queue_wait, h.serve_stale
+    qwait_t, qwait_head = h.qwait_t, h.qwait_head
+    qcap = h.qwait_t.shape[1]
+    if serve_admit is not None and qcap > 0:
+        n = qwait_t.shape[0]
+        enq = serve_enq.astype(jnp.int32)
+        adm = serve_admit.astype(jnp.int32)
+        # queue length before this instant's pushes: post-admission
+        # length + admitted - enqueued
+        len_before = serve_queued.astype(jnp.int32) + adm - enq
+        tail = (qwait_head + len_before) % qcap
+        rows = jnp.arange(n, dtype=jnp.int32)
+        qwait_t = qwait_t.at[rows, tail].set(
+            jnp.where(enq > 0, t, qwait_t[rows, tail])
+        )
+        j = jnp.arange(qcap, dtype=jnp.int32)
+        take = j[None, :] < adm[:, None]                  # (N, Q)
+        slots = (qwait_head[:, None] + j[None, :]) % qcap
+        waits = jnp.maximum(t - jnp.take_along_axis(qwait_t, slots, 1), 0.0)
+        queue_wait = record(queue_wait, waits, take, cfg)
+        serve_stale = record(
+            serve_stale, serve_stale_node.astype(jnp.float32), adm, cfg
+        )
+        qwait_head = (qwait_head + adm) % qcap
+
+    return HistState(
+        merge_lat=merge_lat, commit_lat=commit_lat, chunk_lat=chunk_lat,
+        queue_wait=queue_wait, serve_stale=serve_stale, all_have=all_have,
+        qwait_t=qwait_t, qwait_head=qwait_head,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side percentile extraction
+# ---------------------------------------------------------------------------
+
+
+def percentile(counts: np.ndarray, cfg: HistConfig, q: float):
+    """(value, err) — the q-th percentile with its bin-resolution bound.
+
+    Inverted-CDF over the bins: the reported value is the UPPER edge of
+    the bin holding the ceil(q/100 * total)-th sample, the error bound
+    its bin width (bin 0's support extends down to 0, so its bound is
+    the full first edge; the overflow bin reports ``hi`` with err=inf).
+    The exact percentile of the replayed samples lies within ``err`` of
+    the reported value (property-tested in ``tests/test_hist.py``).
+
+    Returns ``(nan, nan)`` on an empty histogram.
+    """
+    counts = np.asarray(counts)
+    total = int(counts.sum())
+    if total == 0:
+        return float("nan"), float("nan")
+    rank = max(int(np.ceil(q / 100.0 * total)), 1)
+    b = int(np.searchsorted(np.cumsum(counts), rank))
+    e = edges(cfg)
+    if b >= int(cfg.bins):
+        return float(e[-1]), float("inf")
+    value = float(e[b + 1])
+    err = float(e[b + 1]) if b == 0 else float(e[b + 1] - e[b])
+    return value, err
+
+
+def summary(counts: np.ndarray, cfg: HistConfig,
+            qs=(50.0, 95.0, 99.0)) -> dict:
+    """{"samples", "p50", "p50_err", ...} for one histogram (host-side)."""
+    out = {"samples": int(np.asarray(counts).sum())}
+    for q in qs:
+        v, err = percentile(counts, cfg, q)
+        key = f"p{q:g}".replace(".", "_")
+        out[key] = v
+        out[f"{key}_err"] = err
+    return out
+
+
+def report_dict(h: HistState, cfg: HistConfig) -> dict:
+    """Drain one ``HistState`` to a host dict for ``ObsReport.hist``."""
+    counts = {name: np.asarray(getattr(h, name)) for name in HIST_NAMES}
+    return {
+        "bins": int(cfg.bins),
+        "lo": float(cfg.lo),
+        "hi": float(cfg.hi),
+        "edges": edges(cfg),
+        "counts": counts,
+        "percentiles": {
+            name: summary(c, cfg) for name, c in counts.items()
+        },
+    }

@@ -58,7 +58,7 @@ decides how big is big enough (``ObsConfig.series_capacity``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -66,6 +66,7 @@ from repro.core import dag as dag_lib
 from repro.core.dag import DagState
 from repro.net import bank as bank_lib
 from repro.net import replica as replica_lib
+from repro.obs.hist import HistConfig
 
 
 @dataclass(frozen=True)
@@ -79,7 +80,13 @@ class ObsConfig:
     ``annotate`` — wrap each jitted dispatch in a
     ``jax.profiler.TraceAnnotation`` so device profiles name the overlay's
     phases; ``tau_max`` — the staleness threshold the sampled tip count
-    uses (``dag.num_tips``; default = ``DagFLConfig.tau_max``).
+    uses (``dag.num_tips``; default = ``DagFLConfig.tau_max``);
+    ``hist`` — when set, stream every in-loop latency sample into the
+    fixed-bin histograms of ``repro.obs.hist`` (``MetricsState.hist``
+    carries them; None keeps that field an empty pytree and the programs
+    literally hist-free); ``device_spans`` — record host-initiated
+    PUBLISH/COMMIT spans through the device trace ring
+    (``GossipNetwork.trace_device``) instead of the host-event list.
     """
 
     series_capacity: int = 2048
@@ -87,6 +94,8 @@ class ObsConfig:
     trace: bool = True
     annotate: bool = True
     tau_max: float = 20.0
+    hist: Optional[HistConfig] = None
+    device_spans: bool = False
 
 
 class MetricsState(NamedTuple):
@@ -110,6 +119,8 @@ class MetricsState(NamedTuple):
     requests_served: jnp.ndarray  # (S, N) i32 cumulative inference requests
     serve_staleness: jnp.ndarray  # (S,) i32 gated staleness at batch admit
                                   # (-1 = no batch admitted this sample)
+    hist: Any = ()                # HistState when ObsConfig.hist is set;
+                                  # () = zero leaves, the hist-free carry
 
 
 def init_metrics(num_nodes: int, cfg: ObsConfig) -> MetricsState:
@@ -240,4 +251,5 @@ def update(
         serve_staleness=m.serve_staleness.at[slot].set(
             serve_stale.astype(jnp.int32), mode="drop"
         ),
+        hist=m.hist,
     )

@@ -1,0 +1,394 @@
+"""Streaming histogram telemetry (`repro.obs.hist`) + device spans.
+
+Pins the acceptance invariants of the PR-10 quantile-sketch layer:
+
+* ZERO PERTURBATION: a hist-instrumented run — five log-binned latency
+  histograms threaded through every jitted loop next to ``MetricsState``
+  — is BITWISE the obs-off run (final ReplicaSet, bank state, serve
+  counters, and PRNG key alike) across ticks/events x bank x serve x
+  faulted arms;
+* the blocked ``hist_bincount`` Pallas kernel is EXACT against the
+  pure-lax oracle and a numpy bincount, including the drop semantics for
+  out-of-range indices (property-tested);
+* histogram percentiles land within ONE BIN WIDTH of the exact
+  ``numpy.percentile(..., method="inverted_cdf")`` answer — the error
+  bound ``summary`` reports is honest (property-tested);
+* ``ObsConfig.device_spans`` records PUBLISH/COMMIT through the device
+  trace ring bitwise-equivalently to the host-buffered path (modulo the
+  ring's f32 wire precision), without perturbing the simulation;
+* ``simulate_insystem_tips(record_trace=True)`` leaves the measured
+  series bitwise-unchanged, accounts one COMMIT per published
+  transaction, and exports through the shared ``ObsReport`` format.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dag as dag_lib
+from repro.kernels import ops, ref
+from repro.net import events as events_lib
+from repro.net import gossip as gossip_lib
+from repro.net import replica as replica_lib
+from repro.net import topology as topo
+from repro.net.bank import BankGossipConfig
+from repro.net.faults import ROLE_HONEST, FaultConfig
+from repro.net.serve import ServeConfig
+from repro.obs import HistConfig, ObsConfig
+from repro.obs import hist as hist_lib
+from repro.obs import trace as trace_lib
+from repro.obs.export import chrome_trace, metrics_jsonl_lines
+
+CAP, K = 32, 2
+
+
+def genesis(num_nodes):
+    d = dag_lib.empty_dag(CAP, K, num_nodes + 1)
+    return dag_lib.publish(
+        d, jnp.asarray(num_nodes, jnp.int32), jnp.float32(0.0),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(0, jnp.int32),
+    )
+
+
+def make_net(top, engine="events", obs=None, bank_cfg=None, serve=None,
+             faults=None, impl="fused", seed=7, sync_period=1.0):
+    return gossip_lib.GossipNetwork(
+        genesis(top.num_nodes), bank=jnp.zeros((CAP, 8)), top=top,
+        cfg=gossip_lib.GossipConfig(sync_period=sync_period, seed=seed,
+                                    impl=impl, engine=engine),
+        bank_cfg=bank_cfg, obs_cfg=obs, serve_cfg=serve, faults_cfg=faults,
+    )
+
+
+def publish_on(net, node, seq, t):
+    d = replica_lib.publish_local(
+        net.read(node), seq, jnp.asarray(node, jnp.int32), jnp.float32(t),
+        jnp.full((K,), dag_lib.NO_TX, jnp.int32),
+        jnp.float32(0.5), jnp.float32(0.0), jnp.asarray(seq % CAP, jnp.int32),
+    )
+    net.write(node, d)
+    if net.bank_cfg is not None:
+        net.bank_commit(node, seq % CAP, jnp.full((8,), float(seq)))
+
+
+def assert_nets_bitwise(a, b, msg=""):
+    for name in dag_lib.DagState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.replicas.dags, name)),
+            np.asarray(getattr(b.replicas.dags, name)),
+            err_msg=f"{msg}dag.{name}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(a._key), np.asarray(b._key), err_msg=f"{msg}key"
+    )
+    if a.bank_cfg is not None:
+        for name in a.replicas.bank_state._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.replicas.bank_state, name)),
+                np.asarray(getattr(b.replicas.bank_state, name)),
+                err_msg=f"{msg}bank.{name}",
+            )
+    if getattr(a, "_serve", None) is not None:
+        for name in a._sstate._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a._sstate, name)),
+                np.asarray(getattr(b._sstate, name)),
+                err_msg=f"{msg}serve.{name}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# The kernel: blocked bincount == lax oracle == numpy, drops out of range
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 700),
+    num_bins=st.sampled_from([1, 5, 65, 129]),
+)
+def test_property_hist_bincount_kernel_matches_oracle(seed, m, num_bins):
+    rng = np.random.default_rng(seed)
+    # indices straddle both out-of-range sides: the kernel and the oracle
+    # must DROP them identically, never wrap or clamp
+    idx = jnp.asarray(rng.integers(-3, num_bins + 3, (m,)), jnp.int32)
+    w = jnp.asarray(rng.integers(0, 5, (m,)), jnp.int32)
+    exact = np.zeros((num_bins,), np.int64)
+    for i, ww in zip(np.asarray(idx), np.asarray(w)):
+        if 0 <= i < num_bins:
+            exact[i] += ww
+    oracle = np.asarray(ref.hist_bincount_ref(idx, w, num_bins))
+    kernel = np.asarray(ops.hist_bincount(idx, w, num_bins, impl="pallas"))
+    np.testing.assert_array_equal(oracle, exact)
+    np.testing.assert_array_equal(kernel, exact)
+
+
+def test_hist_bincount_lax_impl_dispatches():
+    idx = jnp.asarray([0, 1, 1, 7, -1, 8], jnp.int32)
+    w = jnp.ones((6,), jnp.int32)
+    out = np.asarray(ops.hist_bincount(idx, w, 8, impl="lax"))
+    np.testing.assert_array_equal(out, [1, 2, 0, 0, 0, 0, 0, 1])
+    with pytest.raises(ValueError):
+        ops.hist_bincount(idx, w, 8, impl="nope")
+
+
+# ---------------------------------------------------------------------------
+# Percentiles: within one bin width of exact, the reported bound honest
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 400),
+    spread=st.sampled_from(["mid", "wide", "tiny", "huge"]),
+)
+def test_property_percentile_within_one_bin_of_exact(seed, m, spread):
+    cfg = HistConfig()
+    rng = np.random.default_rng(seed)
+    scale = {"mid": 1.0, "wide": 50.0, "tiny": 1e-5, "huge": 5e3}[spread]
+    values = rng.lognormal(mean=np.log(scale), sigma=2.0, size=m)
+    counts = np.zeros((cfg.bins + 1,), np.int64)
+    b = np.asarray(hist_lib.bin_index(jnp.asarray(values, jnp.float32), cfg))
+    np.add.at(counts, b, 1)
+    for q in (50.0, 95.0, 99.0):
+        value, err = hist_lib.percentile(counts, cfg, q)
+        exact = float(np.percentile(values, q, method="inverted_cdf"))
+        if not np.isfinite(err):            # overflow bin: only hi is known
+            assert exact >= cfg.hi * (1 - 1e-5)
+            assert value == cfg.hi
+        else:
+            # the sketch reports the sample's bin UPPER edge with the bin
+            # width as the bound; f32 binning gets edge-exact values a
+            # relative epsilon of slack
+            assert exact <= value * (1 + 1e-5)
+            assert exact >= (value - err) * (1 - 1e-5)
+
+
+def test_percentile_empty_histogram_is_nan():
+    cfg = HistConfig()
+    counts = np.zeros((cfg.bins + 1,), np.int64)
+    value, err = hist_lib.percentile(counts, cfg, 50.0)
+    assert np.isnan(value) and np.isnan(err)
+    summ = hist_lib.summary(counts, cfg)
+    assert summ["samples"] == 0 and np.isnan(summ["p50"])
+
+
+def test_bin_edges_are_log_spaced_and_cover_the_range():
+    cfg = HistConfig()
+    e = np.asarray(hist_lib.edges(cfg))
+    assert e.shape == (cfg.bins + 1,)
+    assert np.isclose(e[0], cfg.lo) and np.isclose(e[-1], cfg.hi)
+    ratios = e[1:] / e[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+    # underflow folds into bin 0, overflow into the last (bins) bin
+    b = np.asarray(hist_lib.bin_index(
+        jnp.asarray([0.0, cfg.lo / 10, cfg.hi * 10], jnp.float32), cfg
+    ))
+    np.testing.assert_array_equal(b, [0, 0, cfg.bins])
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance invariant: hist-on is bitwise obs-off, every arm
+# ---------------------------------------------------------------------------
+
+
+ARMS = [
+    ("ticks", None, None, None),
+    ("ticks", BankGossipConfig(chunks_per_slot=4), None, None),
+    ("events", BankGossipConfig(chunks_per_slot=4), None, None),
+    ("events", BankGossipConfig(chunks_per_slot=4), ServeConfig(rate=2.0),
+     None),
+    ("ticks", BankGossipConfig(chunks_per_slot=4), None,
+     FaultConfig(roles=(ROLE_HONEST,) * 6)),
+    ("events", BankGossipConfig(chunks_per_slot=4), ServeConfig(rate=2.0),
+     FaultConfig(roles=(ROLE_HONEST,) * 6)),
+]
+
+
+@pytest.mark.parametrize("engine,bank,serve,faults", ARMS)
+def test_hist_on_bitwise_obs_off(engine, bank, serve, faults):
+    top = topo.full(6, link_latency=1.0, seed=3)
+    a = make_net(top, engine, obs=None, bank_cfg=bank, serve=serve,
+                 faults=faults)
+    b = make_net(top, engine, obs=ObsConfig(hist=HistConfig()),
+                 bank_cfg=bank, serve=serve, faults=faults)
+    for net in (a, b):
+        for seq, (node, t) in enumerate([(0, 0.3), (2, 0.7), (4, 1.1)], 1):
+            publish_on(net, node, seq, t)
+    for t in (1.0, 2.5, 6.0):
+        a.advance(t)
+        b.advance(t)
+        assert_nets_bitwise(a, b, msg=f"t={t}:")
+    rep = b.obs_report()
+    assert rep.hist is not None
+    assert set(rep.hist["counts"]) == set(hist_lib.HIST_NAMES)
+
+
+def test_hist_off_is_zero_leaves_next_to_metrics():
+    """``ObsConfig()`` (hist=None) keeps ``MetricsState.hist`` an empty
+    tuple — zero pytree leaves, so plain obs-on carries are untouched."""
+    top = topo.ring(4, link_latency=1.0)
+    net = make_net(top, "ticks", obs=ObsConfig())
+    assert net._metrics.hist == ()
+    assert net.obs_report().hist is None
+
+
+def test_hist_populates_all_five_histograms():
+    """Deterministic end-to-end: a full overlay with bank + serve load
+    samples every histogram — merge, commit, chunk, queue-wait, and
+    staleness-at-serve."""
+    top = topo.full(6, link_latency=1.0, seed=3)
+    net = make_net(top, "events", obs=ObsConfig(hist=HistConfig()),
+                   bank_cfg=BankGossipConfig(chunks_per_slot=4),
+                   serve=ServeConfig(rate=4.0))
+    for seq, (node, t) in enumerate([(0, 0.3), (2, 0.7), (4, 1.1)], 1):
+        publish_on(net, node, seq, t)
+    net.advance(8.0)
+    rep = net.obs_report()
+    counts = {k: int(np.asarray(v).sum()) for k, v in rep.hist["counts"].items()}
+    for name in hist_lib.HIST_NAMES:
+        assert counts[name] > 0, f"{name} never sampled: {counts}"
+    # the export paths carry the sketches: JSONL hist lines + counter tracks
+    hist_lines = [json.loads(l) for l in metrics_jsonl_lines(rep)
+                  if json.loads(l)["kind"] == "hist"]
+    assert {l["name"] for l in hist_lines} == set(hist_lib.HIST_NAMES)
+    for line in hist_lines:
+        assert len(line["counts"]) == line["bins"] + 1
+        assert line["p50"] is None or line["p50"] >= 0
+    ct = chrome_trace(rep)
+    counter_names = {e["name"] for e in ct["traceEvents"] if e["ph"] == "C"}
+    assert {f"hist:{n}" for n in hist_lib.HIST_NAMES} <= counter_names
+    json.loads(json.dumps(ct))              # NaN-free, serializable
+
+
+def test_queue_wait_conserves_admitted_requests():
+    """Every admitted request contributes exactly one queue-wait sample."""
+    top = topo.full(4, link_latency=0.5, seed=1)
+    net = make_net(top, "events", obs=ObsConfig(hist=HistConfig()),
+                   bank_cfg=BankGossipConfig(chunks_per_slot=4),
+                   serve=ServeConfig(rate=4.0))
+    publish_on(net, 0, 1, 0.2)
+    net.advance(6.0)
+    srep = net.serve_report()
+    qw = int(np.asarray(net.obs_report().hist["counts"]["queue_wait"]).sum())
+    # admission is the sampling instant: every request that left the queue
+    # (served, or still in flight at the horizon) weighed in exactly once
+    admitted = (int(srep["arrived_total"]) - int(srep["dropped_total"])
+                - int(np.asarray(srep["queued"]).sum()))
+    assert qw > 0
+    assert qw == admitted
+
+
+# ---------------------------------------------------------------------------
+# Satellite: device-recorded PUBLISH/COMMIT spans pin to the host path
+# ---------------------------------------------------------------------------
+
+
+def test_device_spans_bitwise_host_spans_on_ticks():
+    top = topo.ring(6, link_latency=1.0, seed=3)
+    h = make_net(top, "ticks", obs=ObsConfig())
+    d = make_net(top, "ticks", obs=ObsConfig(device_spans=True))
+    spans = [
+        (0.3, trace_lib.KIND_PUBLISH, 0, 0, 0.5),
+        (0.8, trace_lib.KIND_COMMIT, 0, 0, 1.0),
+        (1.2, trace_lib.KIND_PUBLISH, 3, 3, 0.25),
+        (1.7, trace_lib.KIND_COMMIT, 3, 3, 2.0),
+    ]
+    for seq, (node, t) in enumerate([(0, 0.3), (3, 1.2)], 1):
+        publish_on(h, node, seq, t)
+        publish_on(d, node, seq, t)
+    for t, kind, src, dst, arg in spans:
+        h.trace_span(t, kind, src, dst, arg)
+        d.trace_span(t, kind, src, dst, arg)
+    for t in (1.0, 2.5, 6.0):
+        h.advance(t)
+        d.advance(t)
+        assert_nets_bitwise(h, d, msg=f"t={t}:")
+
+    def span_records(rep):
+        tr = rep.trace
+        sel = np.isin(tr["kind"], (trace_lib.KIND_PUBLISH,
+                                   trace_lib.KIND_COMMIT))
+        rows = sorted(zip(
+            # host buffers float64; the device ring carries f32 — the pin
+            # is AFTER the wire cast
+            np.asarray(tr["t"][sel], np.float32).tolist(),
+            tr["kind"][sel].tolist(), tr["src"][sel].tolist(),
+            tr["dst"][sel].tolist(),
+            np.asarray(tr["arg"][sel], np.float32).tolist(),
+        ))
+        return rows
+
+    host_rows = span_records(h.obs_report())
+    dev_rows = span_records(d.obs_report())
+    assert len(host_rows) == len(spans)
+    assert host_rows == dev_rows
+    # device spans are real dispatches, counted in the funnel
+    assert d.obs_report().dispatch_counts.get("trace_device", 0) == len(spans)
+
+
+def test_device_spans_off_is_dispatch_free():
+    top = topo.ring(4, link_latency=1.0)
+    net = make_net(top, "ticks", obs=ObsConfig())
+    net.trace_span(0.5, trace_lib.KIND_PUBLISH, 0, 0, 0.5)
+    assert net.obs_report().dispatch_counts.get("trace_device", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the in-system tip sim joins the shared obs format
+# ---------------------------------------------------------------------------
+
+
+def _tip_sim(record_trace):
+    return events_lib.simulate_insystem_tips(
+        topo.ring(4, link_latency=0.05), h=0.5, arrival_rate=4.0, k=2,
+        tau_max=2.0, horizon=6.0, capacity=128, seed=3, sync_period=0.25,
+        record_trace=record_trace,
+    )
+
+
+def test_insystem_record_trace_is_bitwise_neutral():
+    a = _tip_sim(False)
+    b = _tip_sim(True)
+    np.testing.assert_array_equal(a.times, b.times)
+    np.testing.assert_array_equal(a.tips, b.tips)
+    np.testing.assert_array_equal(a.staleness, b.staleness)
+    assert a.published == b.published and a.overflow == b.overflow
+    assert a.tail_mean(0.5) == b.tail_mean(0.5)
+    assert a.trace is None and b.trace is not None
+
+
+def test_insystem_trace_accounts_every_publish():
+    tr = _tip_sim(True)
+    kinds = tr.trace["kind"]
+    commits = int((kinds == trace_lib.KIND_COMMIT).sum())
+    publishes = int((kinds == trace_lib.KIND_PUBLISH).sum())
+    assert commits == tr.published
+    # every committed iteration was started; extras are still in flight
+    assert publishes >= commits
+    assert tr.trace_dropped == 0
+    # commit args carry the global sequence: 1..published, each once
+    seqs = np.sort(tr.trace["arg"][kinds == trace_lib.KIND_COMMIT])
+    np.testing.assert_array_equal(seqs, np.arange(1, tr.published + 1))
+
+
+def test_insystem_to_report_exports_via_shared_format():
+    tr = _tip_sim(True)
+    rep = tr.to_report()
+    assert rep.engine == "insystem"
+    assert rep.num_nodes == 4
+    assert rep.samples == len(tr.times)
+    for key in ("t", "tips", "staleness"):
+        assert key in rep.series
+    lines = metrics_jsonl_lines(rep)
+    assert all(isinstance(json.loads(l), dict) for l in lines)
+    ct = chrome_trace(rep)
+    names = {e["name"] for e in ct["traceEvents"]}
+    assert "iteration" in names and "commit" in names
+    json.loads(json.dumps(ct))
